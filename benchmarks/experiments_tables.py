@@ -1,0 +1,101 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.experiments_tables [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.roofline import analyse_record, is_baseline, model_flops
+
+RESULT_DIR = Path(__file__).parent / "results" / "dryrun"
+
+def lever(r) -> str:
+    """Per-row 'what would move the dominant term down' (§Roofline spec)."""
+    shape, dom = r["shape"], r["dominant"]
+    moe = "kimi" in r["arch"] or "granite" in r["arch"]
+    if shape.startswith("train"):
+        if dom == "memory":
+            return ("ZeRO-3 gather FSDP + chunked xent (§Perf-B)"
+                    + ("; int8 expert weights" if moe else "; remat policy"))
+        if dom == "collective":
+            return "reduce-scatter grads / bf16 grad sync"
+        return "more chips or int8 matmul"
+    if shape == "prefill_32k":
+        return ("flash/chunked attention working set (§Perf note; "
+                "metric-blind on host) + bigger per-dev batch")
+    # decode shapes
+    if dom == "collective":
+        return ("seq-shard KV over model axis (§Perf-A) or pipeline stages "
+                "(§Perf-C); int8 KV also halves it")
+    if shape == "long_500k":
+        return "batch more streams (batch=1 underfills); int8 state"
+    return "int8 KV cache (fleet table); pipeline removes cache replication"
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}u"
+
+
+def dryrun_table(mesh_tag: str) -> str:
+    rows = []
+    for f in sorted(RESULT_DIR.glob(f"*_{mesh_tag}.json")):
+        rec = json.loads(f.read_text())
+        if not is_baseline(rec):
+            continue
+        ca = rec.get("cost_analysis_corrected") or rec["cost_analysis"]
+        coll = rec.get("collective_bytes_corrected") or rec["collective_bytes"]
+        arg_gb = rec.get("argument_size_in_bytes", 0) / 2**30
+        tmp_gb = rec.get("temp_size_in_bytes", 0) / 2**30
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compile_s']:.0f} "
+            f"| {ca.get('flops', 0):.3g} | {ca.get('bytes accessed', 0):.3g} "
+            f"| {coll['total']:.3g} | {arg_gb:.2f} | {tmp_gb:.2f} |")
+    head = ("| arch | shape | compile_s | HLO FLOPs/dev | HLO bytes/dev "
+            "| coll bytes/dev | arg GiB/dev | temp GiB/dev |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(mesh_tag: str) -> str:
+    rows = []
+    for f in sorted(RESULT_DIR.glob(f"*_{mesh_tag}.json")):
+        rec = json.loads(f.read_text())
+        if not is_baseline(rec):
+            continue
+        r = analyse_record(rec)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {r['model_flops']:.3g} "
+            f"| {r['useful_ratio']:.3f} | {lever(r)} |")
+    head = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| MODEL_FLOPS | useful ratio | lever to move the dominant term |"
+            "\n|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    a = ap.parse_args()
+    if a.section in ("all", "dryrun"):
+        print(f"### Dry-run ({a.mesh})\n")
+        print(dryrun_table(a.mesh))
+        print()
+    if a.section in ("all", "roofline"):
+        print(f"### Roofline ({a.mesh})\n")
+        print(roofline_table(a.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Fig. 7/8 reproduction: effect of source<->cloud bandwidth (1..50 Mbps) on
+latency and throughput for Llama2-7B/13B.
+
+Validated claims:
+  - collaborative methods improve with bandwidth; Edge-Solo is flat,
+  - the big drop happens 1 -> 10 Mbps, little change 10 -> 50 (saturation),
+  - at high bandwidth EdgeShard's plan converges to Cloud-Edge-Opt's
+    (Cloud-Edge-Opt is a special case of EdgeShard) — EdgeShard is never
+    worse at ANY bandwidth.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import PAPER_MODELS
+from repro.core.devices import MBPS, paper_testbed
+from repro.core.planner import baseline_suite
+from repro.core.profile import Workload
+
+BWS = [1, 5, 10, 25, 50]
+
+
+def run(verbose: bool = True) -> Dict[str, Dict[int, Dict]]:
+    workload = Workload(prompt_len=32, gen_tokens=96, batch=1, dtype_bytes=4)
+    out: Dict[str, Dict[int, Dict]] = {}
+    for name in ("llama2-7b", "llama2-13b"):
+        cfg = PAPER_MODELS[name]
+        out[name] = {}
+        for bw in BWS:
+            cluster = paper_testbed(cloud_bw=bw * MBPS)
+            suite = baseline_suite(cfg, cluster, workload, n_microbatches=8)
+            out[name][bw] = suite
+            if verbose:
+                for m in ("edge-solo", "cloud-edge-even", "cloud-edge-opt",
+                          "edgeshard"):
+                    d = suite[m]
+                    lat = "OOM" if d.oom else f"{d.latency_ms_per_token:.2f}"
+                    thr = "OOM" if d.oom else f"{d.throughput_tok_s:.2f}"
+                    print(f"fig7,{name},{bw}Mbps,{m},{lat},{thr}")
+    return out
+
+
+def validate(results) -> None:
+    r7 = results["llama2-7b"]
+    # Edge-Solo flat; the DP objective is exactly non-increasing in bandwidth
+    solos = [r7[bw]["edge-solo"].latency_ms_per_token for bw in BWS]
+    assert max(solos) - min(solos) < 1e-9
+    obj = [r7[bw]["edgeshard"].plan.objective for bw in BWS]
+    assert all(b <= a + 1e-12 for a, b in zip(obj, obj[1:]))
+    # simulated latency tracks the objective up to phase-mix noise (15%)
+    es = [r7[bw]["edgeshard"].latency_ms_per_token for bw in BWS]
+    assert all(b <= a * 1.15 for a, b in zip(es, es[1:]))
+    # saturation (paper-faithful Algo. 1): 1->10 Mbps improves more than
+    # 10->50 Mbps.  Uses the paper's own DP — our contiguous-DP improvement
+    # legitimately finds a better cloud-heavy plan at 50 Mbps (see
+    # EXPERIMENTS.md §Perf), which the paper's algorithm misses.
+    from repro.configs import PAPER_MODELS
+    from repro.core.devices import MBPS, paper_testbed
+    from repro.core.partition import solve_latency
+    from repro.core.planner import build_problem
+    from repro.core.profile import Workload
+    w = Workload(prompt_len=32, gen_tokens=96, batch=1, dtype_bytes=4)
+    faithful = []
+    for bw in BWS:
+        prob = build_problem(PAPER_MODELS["llama2-7b"],
+                             paper_testbed(cloud_bw=bw * MBPS), w)
+        faithful.append(solve_latency(prob).objective)
+    assert (faithful[0] - faithful[2]) >= (faithful[2] - faithful[4]) - 1e-12
+    # EdgeShard's DP objective never worse than Cloud-Edge-Opt's (special
+    # case property, §V-C) at any bandwidth
+    for bw in BWS:
+        ce = r7[bw]["cloud-edge-opt"]
+        if not ce.oom:
+            assert r7[bw]["edgeshard"].plan.objective <= \
+                ce.plan.objective + 1e-12
+    print("fig7,VALIDATION,pass,,,")
+
+
+def main():
+    validate(run())
+
+
+if __name__ == "__main__":
+    main()

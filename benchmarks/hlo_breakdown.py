@@ -1,0 +1,90 @@
+"""Per-opcode output-bytes breakdown of a compiled dry-run HLO — the
+"profiler" of the CPU-only container (§Perf): shows where the memory-term
+bytes come from (fusion outputs, DUS/copies, collectives, convert/transpose
+resharding artifacts).
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch kimi-k2-1t-a32b \
+        --shape train_4k [--periods 1] [--rules ...] [--fsdp] [--xent-chunk N]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import re
+from collections import Counter
+
+_SHAPE_RE = re.compile(
+    r"=\s+(?:\()?(f64|f32|bf16|f16|f8e\w+|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+    r"\[([0-9,]*)\][^ ]*\s+([a-z][a-z0-9-]*)(?:\.|\()")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+                "pred": 1}
+
+
+def breakdown(hlo: str) -> Counter:
+    out: Counter = Counter()
+    for line in hlo.splitlines():
+        m = _SHAPE_RE.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        nb = 1 if dt.startswith("f8") else _DTYPE_BYTES.get(dt, 4)
+        out[op] += size * nb
+    return out
+
+
+def main():
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import build_step, make_production_mesh
+    from repro.launch.dryrun import shape_aware_sharding_tree
+    from repro.sharding.rules import (decode_seq_model_rules, default_rules,
+                                      fsdp_rules, long_context_rules, use_mesh)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--periods", type=int, default=None,
+                    help="truncate model to N periods (fast introspection)")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--xent-chunk", type=int, default=None)
+    ap.add_argument("--top", type=int, default=15)
+    a = ap.parse_args()
+
+    cfg = get_config(a.arch)
+    if a.periods:
+        cfg = dataclasses.replace(cfg, pattern=cfg.pattern * a.periods,
+                                  n_layers=cfg.period * a.periods)
+    shape = SHAPES[a.shape]
+    mesh = make_production_mesh()
+    long_ctx = shape.phase == "decode" and shape.global_batch < mesh.shape["data"]
+    if a.rules == "decode-seq-model":
+        rules = decode_seq_model_rules(False)
+    elif long_ctx:
+        rules = long_context_rules(False)
+    else:
+        rules = default_rules(False)
+    param_rules = fsdp_rules(False) if a.fsdp else rules
+
+    step, args, arg_axes = build_step(cfg, shape, xent_chunk=a.xent_chunk)
+    n_param_args = 2 if shape.phase == "train" else 1
+    in_sh = tuple(shape_aware_sharding_tree(
+        arg, ax, mesh, param_rules if i < n_param_args else rules)
+        for i, (arg, ax) in enumerate(zip(args, arg_axes)))
+    with use_mesh(mesh, rules):
+        compiled = jax.jit(step, in_shardings=in_sh).lower(*args).compile()
+    bd = breakdown(compiled.as_text())
+    total = sum(bd.values())
+    print(f"# per-opcode output bytes (per device), {a.arch} {a.shape} "
+          f"periods={a.periods or 'all'}  total={total:.3g}")
+    for op, b in bd.most_common(a.top):
+        print(f"{op:28s} {b:12.3g}  {100*b/total:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch x shape x mesh) JSON produced by ``repro.launch.dryrun``:
+
+    compute term    = HLO_FLOPs / (chips x 197e12)
+    memory term     = HLO_bytes / (chips x 819e9)
+    collective term = collective_bytes / (chips x 50e9)
+
+cost_analysis() on the partitioned module reports PER-DEVICE flops/bytes, and
+the collective parser reads the per-device SPMD program, so global terms are
+per-device x chips; after dividing by (chips x peak) the terms reduce to
+per-device quantities over per-chip peaks — reported in seconds.
+
+Also reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) vs HLO FLOPs
+(how much compiled compute is "useful") and the dominant bottleneck.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULT_DIR = Path(__file__).parent / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D analytic model FLOPs for the step the dry-run lowered."""
+    cfg = get_config(arch.split("+")[0])
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch       # decode: one token per seq
+
+
+def analyse_record(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    ca = rec.get("cost_analysis_corrected") or rec["cost_analysis"]
+    coll = rec.get("collective_bytes_corrected") or rec["collective_bytes"]
+    flops_dev = ca.get("flops", 0.0)
+    bytes_dev = ca.get("bytes accessed", 0.0)
+    coll_dev = coll["total"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops_dev * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else float("nan"),
+        "arg_bytes_per_dev": rec.get("argument_size_in_bytes"),
+        "temp_bytes_per_dev": rec.get("temp_size_in_bytes"),
+    }
+
+
+def is_baseline(rec: Dict) -> bool:
+    """True for the 40-pair baseline records (not §Perf variants)."""
+    arch = rec.get("arch", "")
+    # +swa IS the documented long_500k baseline; other +variants are SPerf
+    variant_ok = ("+" not in arch) or (arch.endswith("+swa")
+                                         and rec.get("shape") == "long_500k")
+    return (rec.get("ok", False) and variant_ok
+            and not rec.get("mode", "").startswith("pipeline")
+            and not rec.get("rules_variant")
+            and not rec.get("fsdp") and not rec.get("fsdp_gather")
+            and not rec.get("xent_chunk") and not rec.get("donate")
+            and not rec.get("impl"))
+
+
+def load_all(mesh_tag: str = "pod") -> List[Dict]:
+    out = []
+    for f in sorted(RESULT_DIR.glob(f"*_{mesh_tag}.json")):
+        rec = json.loads(f.read_text())
+        if is_baseline(rec):
+            out.append(analyse_record(rec))
+    return out
+
+
+def print_table(rows: List[Dict], mesh_tag: str = "pod") -> None:
+    print(f"# roofline ({mesh_tag}): arch,shape,compute_s,memory_s,"
+          f"collective_s,dominant,useful_ratio")
+    for r in rows:
+        print(f"roofline,{r['arch']},{r['shape']},{r['compute_s']:.3e},"
+              f"{r['memory_s']:.3e},{r['collective_s']:.3e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f}")
+
+
+def most_interesting(rows: List[Dict]) -> Dict[str, Dict]:
+    """The three hillclimb targets (EXPERIMENTS.md §Perf)."""
+    with_ratio = [r for r in rows if r["useful_ratio"] == r["useful_ratio"]]
+    worst_fraction = min(with_ratio, key=lambda r: r["useful_ratio"])
+    coll_bound = max(rows, key=lambda r: r["collective_s"]
+                     / max(r["compute_s"] + r["memory_s"], 1e-30))
+    return {"worst_useful_ratio": worst_fraction,
+            "most_collective_bound": coll_bound}
+
+
+def main():
+    for tag in ("pod", "multipod"):
+        rows = load_all(tag)
+        if rows:
+            print_table(rows, tag)
+    rows = load_all("pod")
+    if rows:
+        mi = most_interesting(rows)
+        for k, r in mi.items():
+            print(f"roofline-pick,{k},{r['arch']},{r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

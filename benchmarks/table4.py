@@ -1,0 +1,80 @@
+"""Table IV reproduction: latency + throughput of Llama2-7B/13B/70B on the
+paper's 15-device heterogeneous testbed (12x AGX Orin, 2x Orin NX, 1x RTX3090;
+source<->cloud 1 Mbps, edge links 50 Mbps; full-precision weights).
+
+Prints one row per (model, method) and asserts the paper's qualitative
+claims:
+  - 7B:  EdgeShard >= 1.8x lower latency than Edge-Solo / Cloud-Edge-Opt,
+         ~2x throughput over the best baseline,
+  - 13B: Edge-Solo OOMs, EdgeShard beats both cloud-edge baselines,
+  - 70B: every baseline OOMs, EdgeShard serves the model,
+  - Cloud-Edge-Opt degenerates to local execution at 1 Mbps (== Edge-Solo).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import PAPER_MODELS
+from repro.core.devices import MBPS, paper_testbed
+from repro.core.planner import Deployment, baseline_suite
+from repro.core.profile import Workload
+
+METHODS = ["edge-solo", "cloud-edge-even", "cloud-edge-opt", "edgeshard",
+           "edgeshard-throughput"]
+
+
+def run(verbose: bool = True) -> Dict[str, Dict[str, Deployment]]:
+    cluster = paper_testbed(cloud_bw=1 * MBPS, edge_bw=50 * MBPS)
+    workload = Workload(prompt_len=32, gen_tokens=96, batch=1, dtype_bytes=4)
+    out: Dict[str, Dict[str, Deployment]] = {}
+    for name, cfg in PAPER_MODELS.items():
+        suite = baseline_suite(cfg, cluster, workload, n_microbatches=8)
+        out[name] = suite
+        if verbose:
+            for m in METHODS:
+                d = suite[m]
+                lat = "OOM" if d.oom else f"{d.latency_ms_per_token:8.2f}"
+                thr = "OOM" if d.oom else f"{d.throughput_tok_s:8.2f}"
+                devs = len(d.plan.devices_used) if not d.oom else 0
+                print(f"table4,{name},{m},{lat},{thr},{devs}")
+    return out
+
+
+def validate(results: Dict[str, Dict[str, Deployment]]) -> None:
+    r7 = results["llama2-7b"]
+    assert not r7["edge-solo"].oom
+    assert not r7["edgeshard"].oom
+    # paper: EdgeShard ~1.85x faster than Edge-Solo / Cloud-Edge-Opt
+    assert r7["edgeshard"].latency_ms_per_token * 1.8 <= \
+        r7["edge-solo"].latency_ms_per_token
+    # paper: Cloud-Edge-Opt == Edge-Solo at 1 Mbps (local execution optimal)
+    assert abs(r7["cloud-edge-opt"].latency_ms_per_token
+               - r7["edge-solo"].latency_ms_per_token) < 1e-6
+    # paper: ~2x throughput over baselines
+    best_base = max(r7[m].throughput_tok_s
+                    for m in ("edge-solo", "cloud-edge-even", "cloud-edge-opt"))
+    best_es = max(r7["edgeshard"].throughput_tok_s,
+                  r7["edgeshard-throughput"].throughput_tok_s)
+    assert best_es >= 1.9 * best_base, (best_es, best_base)
+
+    r13 = results["llama2-13b"]
+    assert r13["edge-solo"].oom                       # 52 GB > 32 GB
+    assert not r13["edgeshard"].oom
+    assert r13["edgeshard"].latency_ms_per_token <= \
+        min(d.latency_ms_per_token for m, d in r13.items()
+            if not d.oom and m != "edgeshard")
+
+    r70 = results["llama2-70b"]
+    assert r70["edge-solo"].oom
+    assert r70["cloud-edge-even"].oom
+    assert r70["cloud-edge-opt"].oom                  # 280 GB > 32+24 GB
+    assert not r70["edgeshard"].oom                   # sharded across the net
+    print("table4,VALIDATION,pass,,,")
+
+
+def main():
+    validate(run())
+
+
+if __name__ == "__main__":
+    main()

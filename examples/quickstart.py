@@ -1,0 +1,42 @@
+"""Quickstart: plan an EdgeShard deployment and inspect it.
+
+Runs the paper's pipeline end-to-end on the decision layer: profile
+Llama2-7B, solve the joint device-selection + partition DPs on the paper's
+15-device testbed, and simulate latency/throughput for every method of
+Table IV.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import PAPER_MODELS
+from repro.core import Workload, baseline_suite, paper_testbed
+from repro.core.devices import MBPS
+
+
+def main():
+    cfg = PAPER_MODELS["llama2-7b"]
+    cluster = paper_testbed(cloud_bw=1 * MBPS)      # 12x AGX, 2x NX, 1x RTX3090
+    workload = Workload(prompt_len=32, gen_tokens=96, batch=1, dtype_bytes=4)
+
+    print(f"model: {cfg.name} ({cfg.param_count() / 1e9:.2f}B params)")
+    print(f"cluster: {len(cluster.devices)} devices, "
+          f"source={cluster.devices[0].name}, cloud link 1 Mbps\n")
+
+    suite = baseline_suite(cfg, cluster, workload, n_microbatches=8)
+    print(f"{'method':24s} {'latency':>12s} {'throughput':>12s} {'devices':>8s}")
+    for name, d in suite.items():
+        if d.oom:
+            print(f"{name:24s} {'OOM':>12s} {'OOM':>12s} {'-':>8s}")
+        else:
+            print(f"{name:24s} {d.latency_ms_per_token:10.2f}ms "
+                  f"{d.throughput_tok_s:8.2f}t/s {len(d.plan.devices_used):8d}")
+
+    es = suite["edgeshard"]
+    print("\nEdgeShard plan (unit ranges -> device):")
+    for st in es.plan.stages:
+        dev = cluster.devices[st.device]
+        print(f"  units {st.start:3d}..{st.end:3d} -> device {st.device:2d} "
+              f"({dev.name})")
+
+
+if __name__ == "__main__":
+    main()

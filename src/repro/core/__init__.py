@@ -1,0 +1,24 @@
+"""EdgeShard core: profiling, partition DPs, pipeline simulator, planner."""
+from repro.core.devices import ClusterSpec, DeviceSpec, paper_testbed, tpu_pod_cluster
+from repro.core.partition import (PartitionProblem, Plan, Stage,
+                                  brute_force_latency, brute_force_throughput,
+                                  cloud_edge_plans, edge_solo, even_partition,
+                                  plan_latency, plan_stage_time, solve_latency,
+                                  solve_latency_best,
+                                  solve_throughput)
+from repro.core.planner import Deployment, baseline_suite, build_problem, plan_deployment
+from repro.core.profile import ModelProfile, UnitCost, Workload
+from repro.core.simulator import (SimResult, StageCosts, build_stage_costs,
+                                  simulate_pipeline, simulate_sequential)
+
+__all__ = [
+    "ClusterSpec", "DeviceSpec", "paper_testbed", "tpu_pod_cluster",
+    "PartitionProblem", "Plan", "Stage", "brute_force_latency",
+    "brute_force_throughput", "cloud_edge_plans", "edge_solo",
+    "even_partition", "plan_latency", "plan_stage_time", "solve_latency",
+    "solve_latency_best",
+    "solve_throughput", "Deployment", "baseline_suite", "build_problem",
+    "plan_deployment", "ModelProfile", "UnitCost", "Workload", "SimResult",
+    "StageCosts", "build_stage_costs", "simulate_pipeline",
+    "simulate_sequential",
+]

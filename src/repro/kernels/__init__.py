@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""

@@ -1,0 +1,97 @@
+"""Single-token GQA decode attention over a (ring-buffer) KV cache.
+
+The decode hot spot: one query row per sequence against a cache of up to
+524288 keys (``long_500k``).  Grid ``(batch, q_heads, num_kv_blocks)`` with
+online-softmax state in VMEM scratch; the kv axis is innermost so the cache
+streams HBM->VMEM block by block — the kernel is memory-bound by design and
+its roofline is the cache-read term.
+
+Slot validity/window masking is precomputed by the wrapper into a boolean
+``mask [1, C]`` (ring buffers make validity position- not index-monotonic).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, softcap: Optional[float]):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                             # [1, d]
+    k = k_ref[0, :, 0].astype(jnp.float32)                       # [bc, d]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    mask = mask_ref[0]                                           # [bc]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [1, bc]
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask[None, :], jnp.exp(s - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array, *, softcap: Optional[float] = None,
+                         block_c: int = 512, interpret: bool = False,
+                         ) -> jax.Array:
+    """q [B,H,D]; k/v [B,C,KH,D]; mask [1,C] bool (True = attend).
+
+    Returns [B,H,D].  C must be a multiple of ``block_c`` (wrapper pads with
+    masked slots).
+    """
+    b, h, d = q.shape
+    c, kh = k.shape[1], k.shape[2]
+    assert c % block_c == 0, (c, block_c)
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, h, c // block_c)
+
+    q_spec = pl.BlockSpec((1, 1, d), lambda b_, h_, ic: (b_, h_, 0))
+    kv_spec = pl.BlockSpec((1, block_c, 1, d),
+                           lambda b_, h_, ic: (b_, ic, h_ * kh // h, 0))
+    mask_spec = pl.BlockSpec((1, block_c), lambda b_, h_, ic: (0, ic))
+    out_spec = pl.BlockSpec((1, 1, d), lambda b_, h_, ic: (b_, h_, 0))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, mask_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),       # m
+            pltpu.VMEM((1, 1), jnp.float32),       # l
+            pltpu.VMEM((1, d), jnp.float32),       # acc
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -1,0 +1,128 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle layout ([B,S,H,D] model layout <-> [B,H,S,D] kernel layout), padding
+to block multiples, interpret-mode selection (CPU validates the kernel body
+in Python; TPU compiles it), and mask precomputation for the decode kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.int8_matmul import int8_matmul_pallas, quantize_int8
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Model layout: q [B,S,H,D], k/v [B,S,KH,D] -> [B,S,H,D]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, s, h, d = q.shape
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, max(block_q, block_k))
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, max(block_q, block_k))
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), 2, max(block_q, block_k))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, kv_len=s, interpret=interpret)
+    return jnp.swapaxes(out[:, :, :s], 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_c",
+                                             "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     key_pos: jax.Array, pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None, block_c: int = 512,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """q [B,1,H,D] or [B,H,D]; caches [B,C,KH,D]; key_pos [C]; pos scalar."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if q.ndim == 4:
+        q3 = q[:, 0]
+    else:
+        q3 = q
+    c = k_cache.shape[1]
+    bc = min(block_c, c) if c % block_c else block_c
+    if c % bc:
+        bc = c            # tiny caches: single block
+    mask = (key_pos >= 0) & (key_pos <= pos)
+    if window is not None:
+        mask &= key_pos > pos - window
+    kp = _pad_to(k_cache, 1, bc)
+    vp = _pad_to(v_cache, 1, bc)
+    maskp = _pad_to(mask[None, :], 1, bc)
+    out = decode_attention_bhd(q3, kp, vp, maskp, softcap=softcap,
+                               block_c=bc, interpret=interpret)
+    if q.ndim == 4:
+        return out[:, None]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def rglru_scan(log_a: jax.Array, b: jax.Array,
+               h0: Optional[jax.Array] = None, *, block_r: int = 128,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """log_a/b [B,S,R] f32, h0 [B,R] f32 or None -> h [B,S,R] f32."""
+    if interpret is None:
+        interpret = _on_cpu()
+    bb, s, r = log_a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bb, r), jnp.float32)
+    br = block_r if r % block_r == 0 else r
+    la = _pad_to(log_a, 2, br)
+    bv = _pad_to(b, 2, br)
+    h0p = _pad_to(h0, 1, br)
+    out = rglru_scan_pallas(la, bv, h0p, block_r=br, interpret=interpret)
+    return out[:, :, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def int8_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """x [..., K] @ int8 w_q [K, N] * scale [1, N] -> [..., N]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_q.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm = min(block_m, m) if m < block_m else block_m
+    bk = min(block_k, k) if k < block_k else block_k
+    bn = min(block_n, n) if n < block_n else block_n
+    xp = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_q, 0, bk), 1, bn)
+    sp = _pad_to(scale, 1, bn)
+    y = int8_matmul_pallas(xp, wp, sp, block_m=bm, block_n=bn, block_k=bk,
+                           interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+__all__ = ["flash_attention", "decode_attention", "rglru_scan", "int8_matmul",
+           "quantize_int8"]

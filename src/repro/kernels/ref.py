@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        kv_len: Optional[int] = None) -> jax.Array:
+    """q [B,H,S,D], k/v [B,KH,S,D] -> [B,H,S,D]."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    if kv_len is None:
+        kv_len = s
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, kh, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bngsd,bntd->bngst", qf, kf) / math.sqrt(d)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = k_pos <= q_pos
+    mask &= k_pos < kv_len
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,bntd->bngsd", probs, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array, *, softcap: Optional[float] = None,
+                         ) -> jax.Array:
+    """q [B,H,D]; k/v [B,C,KH,D]; mask [1,C] -> [B,H,D]."""
+    b, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, kh, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bngd,bcnd->bngc", qf, kf) / math.sqrt(d)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[0][None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngc,bcnd->bngd", probs, vf)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def rglru_scan_ref(log_a: jax.Array, b: jax.Array, h0: Optional[jax.Array],
+                   ) -> jax.Array:
+    """Sequential reference for h_t = a_t h_{t-1} + b_t. [B,S,R] -> [B,S,R]."""
+    a = jnp.exp(log_a)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    if h0 is None:
+        h0 = jnp.zeros((log_a.shape[0], log_a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.swapaxes(a, 0, 1),
+                                    jnp.swapaxes(b, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def int8_matmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    """x [M,K]; w_q [K,N] int8; scale [1,N] -> [M,N]."""
+    y = x.astype(jnp.float32) @ w_q.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)

@@ -1,0 +1,121 @@
+"""Serving launcher: batched generation through the ServeEngine (TP mode)
+or the EdgeShard stage pipeline (paper mode).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --mode tp --batch 4 --gen 16 [--kvint8]
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --mode pipeline --devices 8 --stages 4
+"""
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="tp", choices=["tp", "pipeline"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--kvint8", action="store_true",
+                    help="int8 KV cache (EXPERIMENTS.md §Perf-A3)")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--stages", type=int, default=4,
+                    help="pipeline stages (pipeline mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    if args.kvint8:
+        cfg = dataclasses.replace(cfg, kv_dtype="int8")
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    if args.mode == "tp":
+        from repro.serving import SamplingParams, ServeEngine
+        mesh = None
+        if args.devices:
+            mesh = jax.make_mesh((1, args.devices), ("data", "model"))
+        eng = ServeEngine(cfg, params, max_batch=args.batch,
+                          max_len=args.max_len, mesh=mesh)
+        sp = SamplingParams(max_tokens=args.gen)
+        t0 = time.time()
+        out = eng.generate(prompts, sp, seed=args.seed)
+        dt = time.time() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s)")
+        print(out[:, :10])
+        return
+
+    # pipeline mode: prefill per micro-batch, then no-bubbles tick decode
+    from repro.core import pipeline as PL
+    assert args.devices, "--mode pipeline needs --devices"
+    mesh = jax.make_mesh((args.devices // args.stages, args.stages),
+                         ("data", "model"))
+    spec = PL.even_pipeline_spec(cfg, args.stages)
+    stage_params, mask = PL.stack_stage_params(cfg, params, spec)
+    M = args.stages                       # no-bubbles occupancy
+    assert args.batch % M == 0
+    mb = args.batch // M
+    data_size = args.devices // args.stages
+    assert mb % data_size == 0, (
+        f"micro-batch {mb} must divide over the data axis ({data_size}); "
+        f"use --batch >= {M * data_size}")
+    with mesh:
+        state = PL.init_pipeline_decode_state(cfg, spec, M, mb, args.max_len,
+                                              dtype=jnp.float32)
+        # prefill each micro-batch through the plain decoder to fill caches
+        # (prompt processing), then stream ticks for generation.
+        feeds = prompts.reshape(M, mb, args.prompt_len)
+        outs = {m: [] for m in range(M)}
+        t0 = time.time()
+        # feed prompt tokens one tick at a time (teacher-forced prefill),
+        # then let generated tokens ride the ring
+        steps = args.prompt_len + 1
+        total = M * args.gen + spec.n_stages + M
+        rounds = {m: 0 for m in range(M)}
+        for t in range(M * (args.prompt_len + args.gen) + spec.n_stages + M):
+            f = t % M
+            r = rounds[f]
+            if r < args.prompt_len:
+                feed = jnp.asarray(feeds[f, :, r])
+            else:
+                feed = jnp.asarray(state.tokens_out[f])    # generated token
+            rounds[f] += 1
+            state = PL.pipeline_decode_tick(cfg, stage_params, mask, state,
+                                            feed, spec, mesh)
+            dm = (t - (spec.n_stages - 1)) % M
+            done_round = rounds[dm] - 1
+            if t >= spec.n_stages - 1 and done_round >= args.prompt_len \
+                    and len(outs[dm]) < args.gen:
+                outs[dm].append(np.asarray(state.tokens_out[dm]))
+            if all(len(outs[m]) >= args.gen for m in range(M)):
+                break
+        dt = time.time() - t0
+    toks = np.stack([np.stack(outs[m]) for m in range(M)])
+    print(f"pipeline generated {toks.shape} (M, gen, mb) in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s on CPU-interpreted SPMD)")
+    print(toks[0, :, 0])
+
+
+if __name__ == "__main__":
+    main()

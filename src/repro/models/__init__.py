@@ -1,0 +1,3 @@
+from repro.models.config import BlockSpec, InputShape, ModelConfig, MoEConfig
+
+__all__ = ["BlockSpec", "InputShape", "ModelConfig", "MoEConfig"]

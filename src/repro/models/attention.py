@@ -1,0 +1,251 @@
+"""GQA attention: full / sliding-window, qk-norm, bias, logit soft-capping.
+
+Three entry points sharing one set of parameters:
+
+- :func:`attend_full`     — train / prefill over a whole sequence,
+- :func:`attend_decode`   — one token against a (ring-buffer) KV cache,
+- :func:`prefill_cache`   — populate the cache while running prefill.
+
+``impl="xla"`` is the pure-jnp reference; ``impl="pallas"`` dispatches the
+flash-attention Pallas kernel for the full-sequence path (prefill hot spot).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.kvcache import attn_cache_len
+from repro.models.layers import (ParamBuilder, apply_rope, rms_norm_headwise,
+                                 softcap)
+from repro.sharding.rules import logical_constraint
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(pb: ParamBuilder, name: str, cfg: ModelConfig):
+    d, q, kv, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
+    sub = pb.scope(name)
+    sub.add("wq", (d, q), ("embed", "qkv"))
+    sub.add("wk", (d, kv), ("embed", "qkv"))
+    sub.add("wv", (d, kv), ("embed", "qkv"))
+    sub.add("wo", (q, d), ("qkv", "embed"))
+    if cfg.qkv_bias:
+        sub.add("bq", (q,), ("qkv",), init="zeros")
+        sub.add("bk", (kv,), ("qkv",), init="zeros")
+        sub.add("bv", (kv,), ("qkv",), init="zeros")
+    if cfg.qk_norm:
+        sub.add("q_norm", (hd,), (None,), init="ones")
+        sub.add("k_norm", (hd,), (None,), init="ones")
+
+
+def _project_qkv(params: Dict, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B,S,d] -> q [B,S,h,hd], k/v [B,S,n_kv,hd]; RoPE applied."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(params["q_norm"], q)
+        k = rms_norm_headwise(params["k_norm"], k)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "kv_heads", None)
+    v = logical_constraint(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, spec: BlockSpec, q: jax.Array, k: jax.Array,
+          v: jax.Array, q_pos: jax.Array, k_pos: jax.Array,
+          k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped scaled-dot-product attention with position-based masking.
+
+    q [B,Sq,h,hd], k/v [B,Sk,n_kv,hd]; q_pos [Sq], k_pos [Sk] absolute
+    positions; mask = causal (k_pos <= q_pos) & window & validity.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    g = h // cfg.n_kv_heads
+    qg = q.reshape(b, sq, cfg.n_kv_heads, g, hd)
+    logits = jnp.einsum("bsngd,btnd->bngst", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    mask = k_pos[None, :] <= q_pos[:, None]                       # causal
+    if spec.window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - spec.window)
+    if k_valid is not None:
+        mask &= k_valid[None, :]
+    logits = jnp.where(mask[None, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h * hd)
+
+
+def _sdpa_chunked(cfg: ModelConfig, spec: BlockSpec, q: jax.Array,
+                  k: jax.Array, v: jax.Array, q_pos: jax.Array,
+                  k_pos: jax.Array, block: int = 1024) -> jax.Array:
+    """Online-softmax attention over key blocks (flash-style, pure XLA).
+
+    Never materializes the [.., Sq, Sk] logits — the SPerf lever for the
+    memory-term-dominated prefill rows: working set drops from O(Sq*Sk) to
+    O(Sq*block).  Semantics identical to :func:`_sdpa` (causal + window +
+    softcap masking).  Sk must be divisible by ``block`` (pad upstream or
+    pick a divisor).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    block = min(block, sk)
+    assert sk % block == 0, (sk, block)
+    g = h // cfg.n_kv_heads
+    qg = q.reshape(b, sq, cfg.n_kv_heads, g, hd)
+    kb = k.reshape(b, sk // block, block, cfg.n_kv_heads, hd)
+    vb = v.reshape(b, sk // block, block, cfg.n_kv_heads, hd)
+    pb = k_pos.reshape(sk // block, block)
+    scale = hd ** -0.5
+
+    def step(carry, inp):
+        m, l, acc = carry                     # [b,n,g,sq], same, [b,n,g,sq,hd]
+        k_c, v_c, kp = inp                    # [b,block,n,hd] x2, [block]
+        logits = jnp.einsum("bsngd,btnd->bngst", qg, k_c,
+                            preferred_element_type=jnp.float32) * scale
+        logits = softcap(logits, cfg.attn_logit_softcap)
+        msk = kp[None, :] <= q_pos[:, None]
+        if spec.window is not None:
+            msk &= kp[None, :] > (q_pos[:, None] - spec.window)
+        logits = jnp.where(msk[None, None, None, :, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bngst,btnd->bngsd", p.astype(jnp.float32), v_c.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, cfg.n_kv_heads, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, cfg.n_kv_heads, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, cfg.n_kv_heads, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # [b,n,g,sq,hd]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * hd)
+    return out.astype(q.dtype)
+
+
+def attend_full(params: Dict, cfg: ModelConfig, spec: BlockSpec, x: jax.Array,
+                positions: jax.Array, impl: str = "xla") -> jax.Array:
+    """Full-sequence causal attention (train / prefill)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q, k, v, causal=True, window=spec.window,
+            softcap=cfg.attn_logit_softcap)
+        out = out.reshape(*x.shape[:2], cfg.q_dim)
+    elif impl == "chunked":
+        out = _sdpa_chunked(cfg, spec, q, k, v, positions, positions)
+    else:
+        out = _sdpa(cfg, spec, q, k, v, positions, positions)
+    y = out @ params["wo"]
+    return logical_constraint(y, "batch", None, "embed")
+
+
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, head) absmax int8 quantization. x [B,S,n_kv,hd] ->
+    (q8 [B,S,n_kv,hd] int8, scale [B,S,n_kv] f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q8 = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q8, -127, 127).astype(jnp.int8), scale
+
+
+def _dequantize_kv(q8: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q8.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def prefill_cache(params: Dict, cfg: ModelConfig, spec: BlockSpec,
+                  x: jax.Array, positions: jax.Array, cache: Dict,
+                  impl: str = "xla") -> Tuple[jax.Array, Dict]:
+    """Run prefill AND write k/v into the (possibly ring) cache."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = _sdpa(cfg, spec, q, k, v, positions, positions)
+    y = out @ params["wo"]
+    y = logical_constraint(y, "batch", None, "embed")
+    c = cache["k"].shape[1]
+    k_tail, v_tail, pos_tail = k, v, positions
+    if k.shape[1] > c:          # sliding window: only the last c tokens survive
+        k_tail, v_tail, pos_tail = k[:, -c:], v[:, -c:], positions[-c:]
+    slots = pos_tail % c
+    key_pos = cache["key_pos"].at[slots].set(pos_tail.astype(jnp.int32))
+    if cfg.kv_dtype == "int8":
+        k8, ks = _quantize_kv(k_tail)
+        v8, vs = _quantize_kv(v_tail)
+        new_cache = {"k": cache["k"].at[:, slots].set(k8),
+                     "v": cache["v"].at[:, slots].set(v8),
+                     "k_scale": cache["k_scale"].at[:, slots].set(ks),
+                     "v_scale": cache["v_scale"].at[:, slots].set(vs),
+                     "key_pos": key_pos,
+                     "pos": positions[-1].astype(jnp.int32) + 1}
+        return y, new_cache
+    ck = cache["k"].at[:, slots].set(k_tail.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v_tail.astype(cache["v"].dtype))
+    new_cache = {"k": ck, "v": cv, "key_pos": key_pos,
+                 "pos": positions[-1].astype(jnp.int32) + 1}
+    return y, new_cache
+
+
+def attend_decode(params: Dict, cfg: ModelConfig, spec: BlockSpec,
+                  x: jax.Array, cache: Dict, impl: str = "xla",
+                  ) -> Tuple[jax.Array, Dict]:
+    """One-token decode against the cache. x: [B, 1, d]."""
+    pos = cache["pos"]
+    positions = pos[None]                                        # [1]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    c = cache["k"].shape[1]
+    slot = pos % c
+    quant = cfg.kv_dtype == "int8"
+    if quant:
+        k8, ks = _quantize_kv(k)
+        v8, vs = _quantize_kv(v)
+        c8k = jax.lax.dynamic_update_slice(cache["k"], k8, (0, slot, 0, 0))
+        c8v = jax.lax.dynamic_update_slice(cache["v"], v8, (0, slot, 0, 0))
+        csk = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        csv = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        ck = _dequantize_kv(c8k, csk, k.dtype)
+        cv = _dequantize_kv(c8v, csv, v.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+    key_pos = jax.lax.dynamic_update_slice(cache["key_pos"],
+                                           pos[None].astype(jnp.int32), (slot,))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(
+            q, ck, cv, key_pos, pos, window=spec.window,
+            softcap=cfg.attn_logit_softcap)
+        out = out.reshape(x.shape[0], 1, cfg.q_dim)
+    else:
+        out = _sdpa(cfg, spec, q, ck, cv, positions, key_pos,
+                    k_valid=key_pos >= 0)
+    y = out @ params["wo"]
+    y = logical_constraint(y, "batch", None, "embed")
+    if quant:
+        new_cache = {"k": c8k, "v": c8v, "k_scale": csk, "v_scale": csv,
+                     "key_pos": key_pos, "pos": pos + 1}
+    else:
+        new_cache = {"k": ck, "v": cv, "key_pos": key_pos, "pos": pos + 1}
+    return y, new_cache

@@ -1,0 +1,51 @@
+"""Stub modality frontends (the one sanctioned carve-out).
+
+``[vlm]`` and ``[audio]`` architecture entries specify the transformer
+backbone only; the ViT / EnCodec frontends are stubs that provide
+*precomputed* patch/frame embeddings of the right shape.  The source-node
+privacy constraint of the paper maps naturally: raw pixels/waveforms never
+leave the source device, only embeddings enter the backbone.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def frontend_embedding_spec(cfg: ModelConfig, batch: int, seq_len: int,
+                            ) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct of the embeddings the stub frontend produces."""
+    assert cfg.frontend in ("vision", "audio")
+    return jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+
+
+def fake_frontend_embeddings(cfg: ModelConfig, key: jax.Array, batch: int,
+                             seq_len: int) -> jax.Array:
+    """Deterministic stand-in embeddings for tests/examples.
+
+    Vision: patch embeddings (pixtral ViT output after the projector).
+    Audio: EnCodec frame embeddings (musicgen consumes token embeddings of
+    interleaved codebooks; the stub collapses them to one stream).
+    """
+    x = jax.random.normal(key, (batch, seq_len, cfg.d_model),
+                          jnp.dtype(cfg.dtype))
+    return x / jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+
+
+def input_spec_for(cfg: ModelConfig, batch: int, seq_len: int,
+                   decode: bool = False):
+    """Token-or-embedding input spec for (arch, shape) combinations.
+
+    Decode steps always consume token ids (the frontend only runs on the
+    prompt); sequence modes consume embeddings for stub-frontend archs.
+    """
+    if decode:
+        return jax.ShapeDtypeStruct((batch,), jnp.int32)
+    if cfg.frontend is not None:
+        return frontend_embedding_spec(cfg, batch, seq_len)
+    return jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)

@@ -1,0 +1,95 @@
+"""Per-layer decode caches: ring-buffer KV, RG-LRU state, xLSTM states.
+
+Caches are plain dict pytrees so they stack cleanly under ``lax.scan`` and
+shard with the same logical-axis rules as activations:
+
+- attention:  k/v ``[B, C, n_kv, head_dim]`` (C = min(max_len, window)),
+  ``key_pos [C]`` absolute position per slot (-1 = empty), ``pos`` scalar.
+- rglru:      hidden ``[B, rnn]``, conv tail ``[B, conv_width-1, rnn]``.
+- mlstm:      C ``[B, heads, dk, dv]``, n ``[B, heads, dk]``, m ``[B, heads]``.
+- slstm:      c/n/h ``[B, d]``, m ``[B, d]`` (stabilizer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import BlockSpec, ModelConfig
+
+
+def attn_cache_len(spec: BlockSpec, max_len: int) -> int:
+    return min(max_len, spec.window) if spec.window else max_len
+
+
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> Dict:
+    if spec.kind == "attn":
+        c = attn_cache_len(spec, max_len)
+        if cfg.kv_dtype == "int8":      # quantized cache + per-(token, head)
+            return {                    # absmax scales (EXPERIMENTS.md SPerf-A)
+                "k": jnp.zeros((batch, c, cfg.n_kv_heads,
+                                cfg.resolved_head_dim), jnp.int8),
+                "v": jnp.zeros((batch, c, cfg.n_kv_heads,
+                                cfg.resolved_head_dim), jnp.int8),
+                "k_scale": jnp.zeros((batch, c, cfg.n_kv_heads), jnp.float32),
+                "v_scale": jnp.zeros((batch, c, cfg.n_kv_heads), jnp.float32),
+                "key_pos": jnp.full((c,), -1, jnp.int32),
+                "pos": jnp.zeros((), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
+            "v": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
+            "key_pos": jnp.full((c,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if spec.kind == "rglru":
+        r = cfg.rnn_dim
+        return {
+            "h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if spec.kind == "mlstm":
+        dp = int(cfg.d_model * cfg.mlstm_proj_factor)
+        hd = dp // cfg.n_heads
+        return {
+            "C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+            "m": jnp.zeros((batch, cfg.n_heads), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if spec.kind == "slstm":
+        d = cfg.d_model
+        return {
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(spec.kind)
+
+
+def cache_logical_axes(cfg: ModelConfig, spec: BlockSpec) -> Dict:
+    """Logical sharding axes matching :func:`init_block_cache`."""
+    if spec.kind == "attn":
+        # "seq_kv" maps to None by default; long-context decode (batch too
+        # small to fill the data axis) remaps it to ("data",) instead.
+        out = {"k": ("batch", "seq_kv", "kv_heads", None),
+               "v": ("batch", "seq_kv", "kv_heads", None),
+               "key_pos": ("seq_kv",), "pos": ()}
+        if cfg.kv_dtype == "int8":
+            out["k_scale"] = ("batch", "seq_kv", "kv_heads")
+            out["v_scale"] = ("batch", "seq_kv", "kv_heads")
+        return out
+    if spec.kind == "rglru":
+        return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn"), "pos": ()}
+    if spec.kind == "mlstm":
+        return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
+                "m": ("batch", "heads"), "pos": ()}
+    if spec.kind == "slstm":
+        return {"c": ("batch", "embed"), "n": ("batch", "embed"),
+                "h": ("batch", "embed"), "m": ("batch", "embed"), "pos": ()}
+    raise ValueError(spec.kind)

@@ -1,0 +1,173 @@
+"""Shared building blocks: param builder, norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.rules import logical_constraint
+
+
+class ParamBuilder:
+    """Creates parameters and records their logical sharding axes.
+
+    ``init(cfg, key)`` paths build a params dict and a parallel ``axes`` dict
+    with the same structure whose leaves are tuples of logical axis names.
+    """
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Dict = {}
+        self.axes: Dict = {}
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def scope(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder.__new__(ParamBuilder)
+        child._key = self._next()
+        child.dtype = self.dtype
+        child.params = self.params.setdefault(name, {})
+        child.axes = self.axes.setdefault(name, {})
+        return child
+
+    def add(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+            init: str = "normal", scale: Optional[float] = None) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            x = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            x = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+            x = s * jax.random.normal(self._next(), shape, self.dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = x
+        self.axes[name] = axes
+        return x
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+def init_norm(pb: ParamBuilder, name: str, dim: int, kind: str):
+    sub = pb.scope(name)
+    sub.add("scale", (dim,), ("embed",), init="ones")
+    if kind == "layernorm":
+        sub.add("bias", (dim,), ("embed",), init="zeros")
+
+
+def apply_norm(params: Dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: RMSNorm over the head_dim axis of [..., head_dim]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------- #
+# rotary / sinusoidal position embeddings
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                          # broadcast heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jax.Array, dim: int) -> jax.Array:
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+
+def init_mlp(pb: ParamBuilder, name: str, cfg: ModelConfig, kind: str,
+             d_ff: Optional[int] = None):
+    if kind == "none":
+        return
+    d, f = cfg.d_model, d_ff if d_ff is not None else cfg.d_ff
+    sub = pb.scope(name)
+    if kind == "swiglu":
+        sub.add("w_gate", (d, f), ("embed", "ff"))
+        sub.add("w_up", (d, f), ("embed", "ff"))
+    else:                                           # gelu (GeGLU-style archs use gate too)
+        sub.add("w_up", (d, f), ("embed", "ff"))
+        sub.add("w_gate", (d, f), ("embed", "ff"))
+    sub.add("w_down", (f, d), ("ff", "embed"))
+
+
+def apply_mlp(params: Dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "none":
+        return jnp.zeros_like(x)
+    up = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate, approximate=True)
+    h = act * up
+    h = logical_constraint(h, "batch", None, "ff")
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------------------- #
+# embeddings / head
+# --------------------------------------------------------------------------- #
+
+def init_embedding(pb: ParamBuilder, cfg: ModelConfig):
+    pb.add("embedding", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+           scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings:
+        pb.add("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+
+
+def embed_tokens(params: Dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = params["embedding"][tokens]
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embedding"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logical_constraint(logits, "batch", None, "vocab")

@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (recurrent mixer, used in place of attention):
+
+    x -> [linear -> GeLU] ----------------\
+    x -> [linear -> causal conv1d -> RG-LRU] --*--> linear -> y
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mode uses ``jax.lax.associative_scan`` (TPU-friendly log-depth scan);
+decode mode is the O(1) single-step update.  A Pallas kernel implements the
+sequential scan for the VMEM-resident case (``kernels/rglru_scan.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamBuilder
+from repro.sharding.rules import logical_constraint
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def init_rglru_block(pb: ParamBuilder, name: str, cfg: ModelConfig):
+    d, r = cfg.d_model, cfg.rnn_dim
+    sub = pb.scope(name)
+    sub.add("w_gelu", (d, r), ("embed", "rnn"))
+    sub.add("w_rnn_in", (d, r), ("embed", "rnn"))
+    sub.add("conv_w", (cfg.conv_width, r), (None, "rnn"))
+    sub.add("conv_b", (r,), ("rnn",), init="zeros")
+    sub.add("w_a", (d, r), ("embed", "rnn"))          # recurrence gate
+    sub.add("w_x", (d, r), ("embed", "rnn"))          # input gate
+    sub.add("lam", (r,), ("rnn",), init="normal", scale=0.5)
+    sub.add("w_out", (r, d), ("rnn", "embed"))
+
+
+def _log_a(params: Dict, gate_x: jax.Array) -> jax.Array:
+    """log a_t = -c * softplus(lambda) * sigmoid(W_a x) (float32)."""
+    r = jax.nn.sigmoid(gate_x)
+    return -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+
+
+def rglru_scan(log_a: jax.Array, gated_x: jax.Array, h0: Optional[jax.Array],
+               ) -> jax.Array:
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (seq).
+
+    log_a: [B, S, R] float32; gated_x: [B, S, R] float32 (already includes the
+    sqrt(1-a^2) * i_t * x_t term).  h0: optional [B, R] initial state.
+    """
+    a = jnp.exp(log_a)
+    b = gated_x
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(params: Dict, x: jax.Array,
+                 conv_state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d over [B, S, R]; returns (y, new_conv_state)."""
+    w = params["conv_w"]                                        # [W, R]
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                      # [B, W-1+S, R]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    y = y + params["conv_b"]
+    new_state = xp[:, -(width - 1):]
+    return y, new_state
+
+
+def apply_rglru_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
+                    state: Optional[Dict] = None, impl: str = "xla",
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Sequence mode. x: [B, S, d] -> (y [B, S, d], new state or None)."""
+    gelu_branch = jax.nn.gelu(x @ params["w_gelu"], approximate=True)
+    u = x @ params["w_rnn_in"]
+    u = logical_constraint(u, "batch", None, "rnn")
+    u, new_conv = _causal_conv(params, u,
+                               state["conv"] if state is not None else None)
+    gate_a = (x @ params["w_a"]).astype(jnp.float32)
+    gate_x = (x @ params["w_x"]).astype(jnp.float32)
+    log_a = _log_a(params, gate_a)
+    i_t = jax.nn.sigmoid(gate_x)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i_t * u.astype(jnp.float32)
+    h0 = state["h"] if state is not None else None
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(log_a, b, h0)
+    else:
+        h = rglru_scan(log_a, b, h0)
+    y = (h.astype(x.dtype) * gelu_branch) @ params["w_out"]
+    y = logical_constraint(y, "batch", None, "embed")
+    if state is None:
+        return y, None
+    new_state = {"h": h[:, -1].astype(jnp.float32), "conv": new_conv,
+                 "pos": state["pos"] + x.shape[1]}
+    return y, new_state
+
+
+def apply_rglru_decode(params: Dict, cfg: ModelConfig, x: jax.Array,
+                       state: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token decode. x: [B, 1, d]."""
+    xt = x[:, 0]
+    gelu_branch = jax.nn.gelu(xt @ params["w_gelu"], approximate=True)
+    u = xt @ params["w_rnn_in"]                                  # [B, R]
+    w = params["conv_w"]
+    width = w.shape[0]
+    conv = state["conv"]                                         # [B, W-1, R]
+    window = jnp.concatenate([conv.astype(u.dtype), u[:, None]], axis=1)
+    u_conv = jnp.einsum("bwr,wr->br", window, w) + params["conv_b"]
+    gate_a = (xt @ params["w_a"]).astype(jnp.float32)
+    gate_x = (xt @ params["w_x"]).astype(jnp.float32)
+    log_a = _log_a(params, gate_a)
+    a = jnp.exp(log_a)
+    i_t = jax.nn.sigmoid(gate_x)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state["h"] + mult * i_t * u_conv.astype(jnp.float32)
+    y = (h.astype(x.dtype) * gelu_branch) @ params["w_out"]
+    new_state = {"h": h, "conv": window[:, 1:],
+                 "pos": state["pos"] + 1}
+    return y[:, None], new_state

@@ -1,0 +1,411 @@
+"""TransformerLM: init + forward for every assigned architecture.
+
+The model is a repeating *pattern* of blocks (see ``ModelConfig``).  Full
+periods are executed with ``jax.lax.scan`` over stacked parameters — HLO size
+stays O(pattern) instead of O(layers), which keeps 61-layer Kimi compilable
+on a 512-device host mesh.  Remainder ("tail") blocks run unrolled.
+
+Three entry points:
+
+- :func:`forward`       — mode="train": logits over the full sequence
+- :func:`forward`       — mode="prefill": logits + populated decode caches
+- :func:`decode_step`   — one token in, one logits row + updated caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.kvcache import cache_logical_axes, init_block_cache
+from repro.models.layers import (ParamBuilder, apply_mlp, apply_norm,
+                                 embed_tokens, init_embedding, init_mlp,
+                                 init_norm, lm_logits, sinusoidal_embedding)
+from repro.sharding.rules import logical_constraint
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+def _init_block(cfg: ModelConfig, spec: BlockSpec, key: jax.Array,
+                dtype) -> Tuple[Dict, Dict]:
+    pb = ParamBuilder(key, dtype)
+    init_norm(pb, "norm1", cfg.d_model, cfg.norm)
+    if spec.kind == "attn":
+        attn.init_attention(pb, "mixer", cfg)
+    elif spec.kind == "rglru":
+        rglru_mod.init_rglru_block(pb, "mixer", cfg)
+    elif spec.kind == "mlstm":
+        xlstm_mod.init_mlstm_block(pb, "mixer", cfg)
+    elif spec.kind == "slstm":
+        xlstm_mod.init_slstm_block(pb, "mixer", cfg)
+    if cfg.post_norm:
+        init_norm(pb, "post_norm1", cfg.d_model, cfg.norm)
+    has_ffn = spec.moe is not None or spec.mlp != "none"
+    if has_ffn:
+        init_norm(pb, "norm2", cfg.d_model, cfg.norm)
+        if spec.moe is not None:
+            moe_mod.init_moe(pb, "ffn", cfg, spec.moe)
+        else:
+            init_mlp(pb, "ffn", cfg, spec.mlp)
+        if cfg.post_norm:
+            init_norm(pb, "post_norm2", cfg.d_model, cfg.norm)
+    return pb.params, pb.axes
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tuple[PyTree, PyTree]:
+    """Returns (params, logical_axes) with matching tree structure."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    pb = ParamBuilder(keys[0], dtype)
+    init_embedding(pb, cfg)
+    params, axes = pb.params, pb.axes
+    init_norm(pb, "final_norm", cfg.d_model, cfg.norm)
+
+    # stacked full periods
+    if cfg.n_full_periods > 0:
+        stack_p: Dict[str, Any] = {}
+        stack_a: Dict[str, Any] = {}
+        for p, spec in enumerate(cfg.pattern):
+            per_period = []
+            for r in range(cfg.n_full_periods):
+                layer_idx = r * cfg.period + p
+                bp, ba = _init_block(cfg, spec, keys[1 + layer_idx], dtype)
+                per_period.append(bp)
+            stack_p[f"p{p}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *per_period)
+            stack_a[f"p{p}"] = jax.tree.map(
+                lambda t: ("layers",) + t, ba,
+                is_leaf=lambda t: isinstance(t, tuple))
+        params["stack"] = stack_p
+        axes["stack"] = stack_a
+
+    # tail blocks (n_layers % period)
+    if cfg.tail:
+        tail_p, tail_a = {}, {}
+        base = cfg.n_full_periods * cfg.period
+        for t, spec in enumerate(cfg.tail):
+            bp, ba = _init_block(cfg, spec, keys[1 + base + t], dtype)
+            tail_p[f"t{t}"] = bp
+            tail_a[f"t{t}"] = ba
+        params["tail"] = tail_p
+        axes["tail"] = tail_a
+    return params, axes
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> PyTree:
+    """Decode caches matching the stacked/tail layout of the params."""
+    caches: Dict[str, Any] = {}
+    if cfg.n_full_periods > 0:
+        stack = {}
+        for p, spec in enumerate(cfg.pattern):
+            one = init_block_cache(cfg, spec, batch, max_len, dtype)
+            stack[f"p{p}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (cfg.n_full_periods,) + x.shape).copy(), one)
+        caches["stack"] = stack
+    if cfg.tail:
+        caches["tail"] = {
+            f"t{t}": init_block_cache(cfg, spec, batch, max_len, dtype)
+            for t, spec in enumerate(cfg.tail)}
+    return caches
+
+
+def cache_axes(cfg: ModelConfig) -> PyTree:
+    axes: Dict[str, Any] = {}
+    if cfg.n_full_periods > 0:
+        axes["stack"] = {
+            f"p{p}": jax.tree.map(lambda t: ("layers",) + tuple(t),
+                                  cache_logical_axes(cfg, spec),
+                                  is_leaf=lambda t: isinstance(t, tuple))
+            for p, spec in enumerate(cfg.pattern)}
+    if cfg.tail:
+        axes["tail"] = {f"t{t}": cache_logical_axes(cfg, spec)
+                        for t, spec in enumerate(cfg.tail)}
+    return axes
+
+
+# --------------------------------------------------------------------------- #
+# block apply
+# --------------------------------------------------------------------------- #
+
+def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
+                 x: jax.Array, positions: jax.Array, mode: str,
+                 cache: Optional[Dict], impl: str,
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    new_cache = cache
+    if spec.kind == "attn":
+        if mode == "train":
+            mix = attn.attend_full(params["mixer"], cfg, spec, h, positions, impl)
+        elif mode == "prefill":
+            mix, new_cache = attn.prefill_cache(params["mixer"], cfg, spec, h,
+                                                positions, cache, impl)
+        else:
+            mix, new_cache = attn.attend_decode(params["mixer"], cfg, spec, h,
+                                                cache, impl)
+    elif spec.kind == "rglru":
+        if mode == "decode":
+            mix, new_cache = rglru_mod.apply_rglru_decode(params["mixer"], cfg,
+                                                          h, cache)
+        else:
+            mix, new_cache = rglru_mod.apply_rglru_seq(
+                params["mixer"], cfg, h, cache if mode == "prefill" else None,
+                impl)
+    elif spec.kind == "mlstm":
+        if mode == "decode":
+            mix, new_cache = xlstm_mod.apply_mlstm_decode(params["mixer"], cfg,
+                                                          h, cache)
+        else:
+            mix, new_cache = xlstm_mod.apply_mlstm_seq(
+                params["mixer"], cfg, h, cache if mode == "prefill" else None)
+    elif spec.kind == "slstm":
+        if mode == "decode":
+            mix, new_cache = xlstm_mod.apply_slstm_decode(params["mixer"], cfg,
+                                                          h, cache)
+        else:
+            mix, new_cache = xlstm_mod.apply_slstm_seq(
+                params["mixer"], cfg, h, cache if mode == "prefill" else None)
+    else:
+        raise ValueError(spec.kind)
+    if cfg.post_norm:
+        mix = apply_norm(params["post_norm1"], mix, cfg.norm)
+    x = x + mix
+    if spec.moe is not None or spec.mlp != "none":
+        h2 = apply_norm(params["norm2"], x, cfg.norm)
+        if spec.moe is not None:
+            ffn, aux = moe_mod.apply_moe(params["ffn"], cfg, spec.moe, h2)
+        else:
+            ffn = apply_mlp(params["ffn"], h2, spec.mlp)
+        if cfg.post_norm:
+            ffn = apply_norm(params["post_norm2"], ffn, cfg.norm)
+        x = x + ffn
+    if mode == "train":
+        new_cache = None
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------- #
+# forward / decode
+# --------------------------------------------------------------------------- #
+
+def _embed_inputs(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = embed_tokens(params, cfg, inputs)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype))     # stub frontend embeddings
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)[None]
+    return logical_constraint(x, "batch", None, "embed")
+
+
+def forward(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
+            mode: str = "train", caches: Optional[PyTree] = None,
+            pos_offset: int = 0, impl: str = "xla",
+            ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Full-sequence forward. inputs: [B, S] int tokens or [B, S, d] embeds.
+
+    Returns (logits [B, S, vocab], caches or None, aux_loss scalar).
+    """
+    assert mode in ("train", "prefill")
+    b, s = inputs.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32) + pos_offset
+    x = _embed_inputs(cfg, params, inputs, positions)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.n_full_periods > 0:
+        stack_params = params["stack"]
+        stack_caches = (caches or {}).get("stack")
+
+        def body(carry, per_period):
+            x_c, aux_c = carry
+            p_params, p_caches = per_period
+            new_p_caches = {}
+            for p, spec in enumerate(cfg.pattern):
+                cache_p = p_caches[f"p{p}"] if p_caches is not None else None
+                x_c, nc, aux = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
+                                            positions, mode, cache_p, impl)
+                new_p_caches[f"p{p}"] = nc
+                aux_c = aux_c + aux
+            ys = new_p_caches if mode == "prefill" else None
+            return (x_c, aux_c), ys
+
+        (x, aux_total), scanned_caches = jax.lax.scan(
+            body, (x, aux_total), (stack_params, stack_caches))
+        if mode == "prefill":
+            new_caches["stack"] = scanned_caches
+
+    if cfg.tail:
+        base = cfg.n_full_periods * cfg.period
+        new_tail = {}
+        for t, spec in enumerate(cfg.tail):
+            cache_t = (caches or {}).get("tail", {}).get(f"t{t}")
+            x, nc, aux = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
+                                      positions, mode, cache_t, impl)
+            new_tail[f"t{t}"] = nc
+            aux_total = aux_total + aux
+        if mode == "prefill":
+            new_caches["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params, cfg, x)
+    return logits, (new_caches if mode == "prefill" else None), aux_total
+
+
+def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
+                caches: PyTree, impl: str = "xla",
+                ) -> Tuple[jax.Array, PyTree]:
+    """One decode step. inputs: [B] int tokens or [B, d] embeddings.
+
+    Returns (logits [B, vocab], updated caches).
+    """
+    if inputs.ndim == 1 and jnp.issubdtype(inputs.dtype, jnp.integer):
+        inputs2 = inputs[:, None]
+    else:
+        inputs2 = inputs[:, None, :]
+    pos = _first_pos(caches)
+    positions = pos[None]
+    x = _embed_inputs(cfg, params, inputs2, positions)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.n_full_periods > 0:
+        def body(x_c, per_period):
+            p_params, p_caches = per_period
+            new_p = {}
+            for p, spec in enumerate(cfg.pattern):
+                x_c, nc, _ = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
+                                          positions, "decode",
+                                          p_caches[f"p{p}"], impl)
+                new_p[f"p{p}"] = nc
+            return x_c, new_p
+
+        x, new_caches["stack"] = jax.lax.scan(
+            body, x, (params["stack"], caches["stack"]))
+
+    if cfg.tail:
+        new_tail = {}
+        for t, spec in enumerate(cfg.tail):
+            x, nc, _ = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
+                                    positions, "decode",
+                                    caches["tail"][f"t{t}"], impl)
+            new_tail[f"t{t}"] = nc
+        new_caches["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params, cfg, x)
+    return logits[:, 0], new_caches
+
+
+def _first_pos(caches: PyTree) -> jax.Array:
+    """Current decode position = pos of the first cache leaf."""
+    if "stack" in caches:
+        first = caches["stack"]["p0"]["pos"]
+        return first[0]
+    return caches["tail"]["t0"]["pos"]
+
+
+# --------------------------------------------------------------------------- #
+# loss
+# --------------------------------------------------------------------------- #
+
+def cross_entropy_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None,
+                       z_loss: float = 1e-4) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def forward_hidden(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
+                   impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """Like forward(mode="train") but stops at the final normalized hidden
+    state (no logits) — the chunked-loss path computes logits blockwise."""
+    b, s = inputs.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = _embed_inputs(cfg, params, inputs, positions)
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.n_full_periods > 0:
+        def body(carry, per_period):
+            x_c, aux_c = carry
+            p_params = per_period
+            for p, spec in enumerate(cfg.pattern):
+                x_c, _, aux = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
+                                           positions, "train", None, impl)
+                aux_c = aux_c + aux
+            return (x_c, aux_c), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["stack"])
+    if cfg.tail:
+        for t, spec in enumerate(cfg.tail):
+            x, _, aux = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
+                                     positions, "train", None, impl)
+            aux_total = aux_total + aux
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux_total
+
+
+def chunked_xent(cfg: ModelConfig, params: PyTree, hidden: jax.Array,
+                 labels: jax.Array, chunk: int,
+                 z_loss: float = 1e-4) -> jax.Array:
+    """Cross entropy over seq chunks — never materializes [B, S, V] logits.
+
+    Memory-roofline optimization (EXPERIMENTS.md §Perf): for 256k-vocab
+    models the full logits tensor dominates HBM traffic of the train step.
+    """
+    b, s, d = hidden.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    h = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def one(carry, hy):
+        hc, yc = hy
+        logits = lm_logits(params, cfg, hc)
+        logits = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = logz - gold + z_loss * jnp.square(logz)
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(one, jnp.zeros((), jnp.float32), (h, y))
+    return total / (b * s)
+
+
+def train_loss(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+               labels: jax.Array, mask: Optional[jax.Array] = None,
+               impl: str = "xla", xent_chunk: Optional[int] = None,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if xent_chunk:
+        hidden, aux = forward_hidden(cfg, params, tokens, impl=impl)
+        ce = chunked_xent(cfg, params, hidden, labels, xent_chunk)
+    else:
+        logits, _, aux = forward(cfg, params, tokens, mode="train", impl=impl)
+        ce = cross_entropy_loss(cfg, logits, labels, mask)
+    lb_weight = 0.0
+    for spec in cfg.pattern:
+        if spec.moe is not None:
+            lb_weight = spec.moe.load_balance_weight
+    total = ce + lb_weight * aux
+    return total, {"ce": ce, "aux": aux}

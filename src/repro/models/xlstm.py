@@ -1,0 +1,213 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential).
+
+mLSTM sequence mode uses the parallel (linear-attention-like) form with
+log-gate stabilization; decode mode uses the O(1) recurrent update.  The two
+forms are mathematically identical (validated in tests):
+
+    d_ts = F_t - F_s + log i_s,   F_t = sum_{j<=t} log f_j
+    m_t  = max_s d_ts
+    h_t  = [sum_s e^{d_ts - m_t} (q_t.k_s/sqrt(d)) v_s]
+           / max(|sum_s e^{d_ts - m_t} q_t.k_s/sqrt(d)|, e^{-m_t})
+
+sLSTM uses exponential gating with the same stabilizer and block-diagonal
+(per-head) recurrent weights; sequence mode is a ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamBuilder
+from repro.sharding.rules import logical_constraint
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+
+def init_mlstm_block(pb: ParamBuilder, name: str, cfg: ModelConfig):
+    d = cfg.d_model
+    dp = int(d * cfg.mlstm_proj_factor)
+    sub = pb.scope(name)
+    sub.add("w_up", (d, dp), ("embed", "heads"))
+    sub.add("w_gate", (d, dp), ("embed", "heads"))
+    sub.add("wq", (dp, dp), ("heads", None))
+    sub.add("wk", (dp, dp), ("heads", None))
+    sub.add("wv", (dp, dp), ("heads", None))
+    sub.add("w_i", (dp, cfg.n_heads), ("heads", None))
+    sub.add("w_f", (dp, cfg.n_heads), ("heads", None))
+    sub.add("b_i", (cfg.n_heads,), (None,), init="zeros")
+    sub.add("b_f", (cfg.n_heads,), (None,), init="ones")
+    sub.add("w_down", (dp, d), ("heads", "embed"))
+
+
+def _mlstm_qkv_gates(params, cfg, x):
+    """x [B,S,d] -> q,k,v [B,S,h,hd], log_i/log_f [B,S,h], gate [B,S,dp]."""
+    b, s, _ = x.shape
+    dp = params["w_up"].shape[1]
+    h = cfg.n_heads
+    hd = dp // h
+    u = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    q = (u @ params["wq"]).reshape(b, s, h, hd)
+    k = (u @ params["wk"]).reshape(b, s, h, hd)
+    v = (u @ params["wv"]).reshape(b, s, h, hd)
+    log_i = jax.nn.log_sigmoid(
+        (u @ params["w_i"] + params["b_i"]).astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(
+        (u @ params["w_f"] + params["b_f"]).astype(jnp.float32))
+    return q, k, v, log_i, log_f, gate
+
+
+def mlstm_parallel(q, k, v, log_i, log_f):
+    """Parallel mLSTM. q/k/v [B,S,h,hd]; log gates [B,S,h] -> h_out [B,S,h,hd]."""
+    b, s, h, hd = q.shape
+    scale = hd ** -0.5
+    F = jnp.cumsum(log_f, axis=1)                                 # [B,S,h]
+    # d_ts = F_t - F_s + log i_s for s<=t
+    dmat = (F[:, :, None, :] - F[:, None, :, :]
+            + log_i[:, None, :, :])                               # [B,t,s,h]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2)                                     # [B,t,h]
+    w = jnp.exp(dmat - m[:, :, None, :])                          # [B,t,s,h]
+    qk = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    num = jnp.einsum("btsh,btsh,bshd->bthd", w, qk, v.astype(jnp.float32))
+    den = jnp.abs(jnp.einsum("btsh,btsh->bth", w, qk))
+    den = jnp.maximum(den, jnp.exp(-m))
+    return (num / den[..., None]), m, F
+
+
+def apply_mlstm_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
+                    state: Optional[Dict] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Sequence mode (train / prefill). x: [B, S, d].
+
+    Note: when a fresh state dict is supplied, the final (C, n, m) state is
+    reconstructed recurrently from the parallel outputs for decode handoff.
+    """
+    b, s, d = x.shape
+    q, k, v, log_i, log_f, gate = _mlstm_qkv_gates(params, cfg, x)
+    hseq, m, F = mlstm_parallel(q, k, v, log_i, log_f)
+    hd = q.shape[-1]
+    out = (hseq.reshape(b, s, -1).astype(x.dtype)) * jax.nn.silu(gate)
+    y = out @ params["w_down"]
+    y = logical_constraint(y, "batch", None, "embed")
+    if state is None:
+        return y, None
+    # closed-form final state: C_S = sum_s exp(F_S - F_s + log i_s - m_S) k_s v_s^T
+    scale = hd ** -0.5
+    m_last = m[:, -1]                                             # [B,h]
+    wgt = jnp.exp(F[:, -1][:, None] - F + log_i - m_last[:, None])  # [B,S,h]
+    C = jnp.einsum("bsh,bshd,bshe->bhde", wgt, k.astype(jnp.float32) * scale,
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", wgt, k.astype(jnp.float32) * scale)
+    new_state = {"C": C, "n": n, "m": m_last, "pos": state["pos"] + s}
+    return y, new_state
+
+
+def apply_mlstm_decode(params: Dict, cfg: ModelConfig, x: jax.Array,
+                       state: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent update. x: [B, 1, d]."""
+    b = x.shape[0]
+    q, k, v, log_i, log_f, gate = _mlstm_qkv_gates(params, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                           # [B,h,hd]
+    log_i, log_f, gate = log_i[:, 0], log_f[:, 0], gate[:, 0]
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(log_f + m_prev, log_i)                    # [B,h]
+    f_ = jnp.exp(log_f + m_prev - m_new)
+    i_ = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32) * scale
+    C = f_[..., None, None] * C_prev + i_[..., None, None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = f_[..., None] * n_prev + i_[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, -1)
+    out = h.astype(x.dtype) * jax.nn.silu(gate)
+    y = (out @ params["w_down"])[:, None]
+    y = logical_constraint(y, "batch", None, "embed")
+    return y, {"C": C, "n": n, "m": m_new, "pos": state["pos"] + 1}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+
+def init_slstm_block(pb: ParamBuilder, name: str, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dp = int(d * cfg.slstm_proj_factor)
+    sub = pb.scope(name)
+    for g in ("i", "f", "z", "o"):
+        sub.add(f"w_{g}", (d, d), ("embed", None))
+        sub.add(f"r_{g}", (h, dh, dh), ("heads", None, None))
+        sub.add(f"b_{g}", (d,), (None,), init="ones" if g == "f" else "zeros")
+    sub.add("w_up", (d, dp), ("embed", "ff"))
+    sub.add("w_down", (dp, d), ("ff", "embed"))
+
+
+def _slstm_step(params, cfg, carry, xt):
+    """One sLSTM step. carry: (c, n, h, m) each [B, d]; xt: [B, d]."""
+    c, n, h, m = carry
+    b = xt.shape[0]
+    heads, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    hh = h.reshape(b, heads, dh)
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", hh, params[f"r_{g}"]).reshape(b, -1)
+
+    pre = {g: (xt @ params[f"w_{g}"] + rec(g) + params[f"b_{g}"]
+               ).astype(jnp.float32) for g in ("i", "f", "z", "o")}
+    log_i = pre["i"]                                  # exponential input gate
+    log_f = jax.nn.log_sigmoid(pre["f"])
+    z = jnp.tanh(pre["z"])
+    o = jax.nn.sigmoid(pre["o"])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_ = jnp.exp(log_i - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, h_new.astype(jnp.float32), m_new), h_new
+
+
+def apply_slstm_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
+                    state: Optional[Dict] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Sequence mode via lax.scan over time. x: [B, S, d]."""
+    b, s, d = x.shape
+    if state is None:
+        carry = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, xt):
+        return _slstm_step(params, cfg, carry, xt)
+
+    (c, n, h, m), hs = jax.lax.scan(step, carry, jnp.swapaxes(x, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1).astype(x.dtype)                   # [B,S,d]
+    y = jax.nn.gelu(hs @ params["w_up"], approximate=True) @ params["w_down"]
+    y = logical_constraint(y, "batch", None, "embed")
+    if state is None:
+        return y, None
+    return y, {"c": c, "n": n, "h": h, "m": m, "pos": state["pos"] + s}
+
+
+def apply_slstm_decode(params: Dict, cfg: ModelConfig, x: jax.Array,
+                       state: Dict) -> Tuple[jax.Array, Dict]:
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), ht = _slstm_step(params, cfg, carry, x[:, 0])
+    y = jax.nn.gelu(ht.astype(x.dtype) @ params["w_up"],
+                    approximate=True) @ params["w_down"]
+    return y[:, None], {"c": c, "n": n, "h": h, "m": m, "pos": state["pos"] + 1}

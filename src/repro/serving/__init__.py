@@ -1,0 +1,2 @@
+from repro.serving.engine import Request, SamplingParams, ServeEngine, sample_logits
+from repro.serving.scheduler import ContinuousBatcher, SchedulerStats

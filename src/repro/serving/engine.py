@@ -1,0 +1,132 @@
+"""Serving engine: prefill + decode with batching and sampling.
+
+Two execution modes sharing the sampling/stopping logic:
+
+- ``tensor``   — pjit tensor-parallel (or single-device) prefill + decode,
+- ``pipeline`` — EdgeShard stage-pipeline decode via the no-bubbles tick
+  protocol (``core/pipeline.py``), the paper's deployment mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.sharding.rules import use_mesh
+
+PyTree = Any
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 0.0          # 0 = greedy
+    top_k: int = 0                    # 0 = no top-k filtering
+    max_tokens: int = 64
+    eos_id: Optional[int] = None
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                # [S] int32
+    params: SamplingParams = field(default_factory=SamplingParams)
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.params.max_tokens:
+            return True
+        eos = self.params.eos_id
+        return eos is not None and len(self.generated) > 0 \
+            and self.generated[-1] == eos
+
+
+def sample_logits(key: jax.Array, logits: jax.Array,
+                  sp: SamplingParams) -> jax.Array:
+    """logits [B, V] -> tokens [B]."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / sp.temperature
+    if sp.top_k:
+        kth = jax.lax.top_k(logits, sp.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Batched prefill + decode over a fixed model and cache budget."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, max_batch: int,
+                 max_len: int, mesh=None, impl: str = "xla",
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.mesh = mesh
+        self.impl = impl
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(functools.partial(
+            T.forward, cfg, mode="prefill", impl=impl),
+            static_argnames=())
+        self._decode = jax.jit(functools.partial(T.decode_step, cfg,
+                                                 impl=impl))
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, prompts: jax.Array) -> Tuple[jax.Array, PyTree]:
+        """prompts [B, S] -> (next-token logits [B, V], caches)."""
+        b = prompts.shape[0]
+        caches = T.init_caches(self.cfg, b, self.max_len, self.cache_dtype)
+        with use_mesh(self.mesh):
+            logits, caches, _ = self._prefill(self.params, prompts,
+                                              caches=caches)
+        return logits[:, -1], caches
+
+    def decode(self, tokens: jax.Array, caches: PyTree,
+               ) -> Tuple[jax.Array, PyTree]:
+        with use_mesh(self.mesh):
+            return self._decode(self.params, tokens, caches)
+
+    # ------------------------------------------------------------------ #
+    def generate(self, prompts: np.ndarray, sp: SamplingParams,
+                 seed: int = 0) -> np.ndarray:
+        """prompts [B, S] -> generated tokens [B, max_tokens]."""
+        b = prompts.shape[0]
+        assert b <= self.max_batch
+        key = jax.random.PRNGKey(seed)
+        logits, caches = self.prefill(jnp.asarray(prompts, jnp.int32))
+        out = np.zeros((b, sp.max_tokens), np.int32)
+        key, sub = jax.random.split(key)
+        tok = sample_logits(sub, logits, sp)
+        finished = np.zeros(b, bool)
+        for t in range(sp.max_tokens):
+            out[:, t] = np.where(finished, out[:, t - 1] if t else 0,
+                                 np.asarray(tok))
+            if sp.eos_id is not None:
+                finished |= np.asarray(tok) == sp.eos_id
+                if finished.all():
+                    break
+            if t == sp.max_tokens - 1:
+                break
+            logits, caches = self.decode(tok, caches)
+            key, sub = jax.random.split(key)
+            tok = sample_logits(sub, logits, sp)
+        return out
+
+    def score(self, tokens: jax.Array) -> jax.Array:
+        """Log-likelihood of each sequence under the model."""
+        with use_mesh(self.mesh):
+            logits, _, _ = jax.jit(functools.partial(
+                T.forward, self.cfg, mode="train", impl=self.impl))(
+                self.params, tokens)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logp[:, :-1], tokens[:, 1:, None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(gold, axis=-1)

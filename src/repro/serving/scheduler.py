@@ -1,0 +1,99 @@
+"""Request scheduler: continuous batching + the no-bubbles admission rule.
+
+The paper's EdgeShard-No-bubbles schedule admits a micro-batch's next
+iteration as soon as its token returns, instead of waiting for the iteration
+barrier.  At the serving layer this is continuous batching: a slot is
+recycled the moment its request finishes, and new requests join without
+draining the batch.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Request, SamplingParams, ServeEngine, sample_logits
+
+
+@dataclass
+class SchedulerStats:
+    served: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    slot_busy_steps: int = 0
+    slot_total_steps: int = 0
+
+    @property
+    def utilization(self) -> float:
+        return self.slot_busy_steps / max(self.slot_total_steps, 1)
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over one ServeEngine.
+
+    Prompts are padded to a common prefill length per admission wave; decode
+    runs with one shared KV cache whose batch dim is the slot array.
+    """
+
+    def __init__(self, engine: ServeEngine, prompt_len: int, seed: int = 0):
+        self.engine = engine
+        self.prompt_len = prompt_len
+        self.queue: Deque[Request] = deque()
+        self.done: Dict[int, Request] = {}
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = SchedulerStats()
+
+    def submit(self, req: Request):
+        assert len(req.prompt) == self.prompt_len, "pad prompts to prompt_len"
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Serve until the queue drains. Returns finished requests by uid."""
+        eng = self.engine
+        b = eng.max_batch
+        slots: List[Optional[Request]] = [None] * b
+        caches = None
+        cur_tok = np.zeros(b, np.int32)
+        steps = 0
+        while (self.queue or any(s is not None for s in slots)) \
+                and steps < max_steps:
+            # admission wave: fill empty slots, re-prefill batch-wide
+            if self.queue and any(s is None for s in slots):
+                for i in range(b):
+                    if slots[i] is None and self.queue:
+                        slots[i] = self.queue.popleft()
+                prompts = np.stack([
+                    s.prompt if s is not None
+                    else np.zeros(self.prompt_len, np.int32)
+                    for s in slots])
+                logits, caches = eng.prefill(jnp.asarray(prompts))
+                self.stats.prefills += 1
+                self.key, sub = jax.random.split(self.key)
+                sp = next(s.params for s in slots if s is not None)
+                cur_tok = np.asarray(sample_logits(sub, logits, sp))
+                for i, s in enumerate(slots):
+                    if s is not None and not s.done:
+                        s.generated.append(int(cur_tok[i]))
+            # one decode step for every active slot
+            logits, caches = eng.decode(jnp.asarray(cur_tok), caches)
+            self.stats.decode_steps += 1
+            self.key, sub = jax.random.split(self.key)
+            sp = next((s.params for s in slots if s is not None),
+                      SamplingParams())
+            cur_tok = np.asarray(sample_logits(sub, logits, sp))
+            self.stats.slot_total_steps += b
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                self.stats.slot_busy_steps += 1
+                s.generated.append(int(cur_tok[i]))
+                if s.done:
+                    self.done[s.uid] = s
+                    self.stats.served += 1
+                    slots[i] = None     # continuous: recycle immediately
+            steps += 1
+        return self.done

@@ -1,0 +1,5 @@
+from repro.training.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.training.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, make_dataset
+from repro.training.train_loop import TrainConfig, make_train_step, train

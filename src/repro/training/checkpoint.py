@@ -1,0 +1,91 @@
+"""Dependency-free checkpointing: flattened pytree -> .npz + JSON manifest.
+
+Sharded-aware: arrays are gathered to host before save; restore re-places
+them with the caller's shardings.  Atomic via tmp-file rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, params: PyTree, opt_state: Optional[PyTree] = None,
+                    step: int = 0, extra: Optional[Dict] = None) -> str:
+    """Write ``<path>/ckpt_<step>.npz`` (+ manifest.json). Returns file path."""
+    out = Path(path)
+    out.mkdir(parents=True, exist_ok=True)
+    blobs = {f"params{SEP}{k}": v
+             for k, v in _flatten_with_paths(params).items()}
+    if opt_state is not None:
+        blobs.update({f"opt{SEP}{k}": v
+                      for k, v in _flatten_with_paths(opt_state).items()})
+    fname = out / f"ckpt_{step}.npz"
+    tmp = out / f".tmp_ckpt_{step}.npz"
+    np.savez(tmp, **blobs)
+    os.replace(tmp, fname)
+    manifest = {"step": step, "keys": sorted(blobs),
+                "extra": extra or {}}
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return str(fname)
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    out = Path(path)
+    if not out.exists():
+        return None
+    ckpts = sorted(out.glob("ckpt_*.npz"),
+                   key=lambda p: int(p.stem.split("_")[1]))
+    return str(ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(fname: str, params_template: PyTree,
+                       opt_template: Optional[PyTree] = None,
+                       ) -> Tuple[PyTree, Optional[PyTree], int]:
+    """Restore into the structure of the provided templates."""
+    blobs = np.load(fname)
+    step = int(Path(fname).stem.split("_")[1])
+
+    def fill(template: PyTree, prefix: str) -> PyTree:
+        paths, tdef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in paths:
+            key = prefix + SEP + SEP.join(_path_str(p) for p in path)
+            arr = blobs[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            val = jnp.asarray(arr, dtype=leaf.dtype)
+            if hasattr(leaf, "sharding") and leaf.sharding is not None:
+                try:
+                    val = jax.device_put(val, leaf.sharding)
+                except Exception:
+                    pass
+            leaves.append(val)
+        return jax.tree_util.tree_unflatten(tdef, leaves)
+
+    params = fill(params_template, "params")
+    opt = fill(opt_template, "opt") if opt_template is not None else None
+    return params, opt, step

@@ -1,0 +1,108 @@
+"""Training loop: jit'd train_step with sharded params + grad accumulation."""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.sharding.rules import logical_constraint, param_sharding_tree, use_mesh
+from repro.training.adamw import (AdamWConfig, AdamWState, adamw_init,
+                                  adamw_update)
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import DataConfig, make_dataset
+
+PyTree = Any
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0               # 0 = only final
+    ckpt_dir: Optional[str] = None
+    grad_accum: int = 1
+    impl: str = "xla"
+    optimizer: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns jit-able train_step((params, opt), (tokens, labels))."""
+
+    def loss_fn(params, tokens, labels):
+        total, parts = T.train_loss(cfg, params, tokens, labels,
+                                    impl=tcfg.impl)
+        return total, parts
+
+    def train_step(params: PyTree, opt: AdamWState, tokens: jax.Array,
+                   labels: jax.Array):
+        tokens = logical_constraint(tokens, "batch", None)
+        labels = logical_constraint(labels, "batch", None)
+        if tcfg.grad_accum > 1:
+            b = tokens.shape[0]
+            mb = b // tcfg.grad_accum
+            def micro(carry, idx):
+                g_acc, l_acc = carry
+                tk = jax.lax.dynamic_slice_in_dim(tokens, idx * mb, mb, 0)
+                lb = jax.lax.dynamic_slice_in_dim(labels, idx * mb, mb, 0)
+                (loss, parts), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, tk, lb)
+                g_acc = jax.tree.map(lambda a, g: a + g, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero, jnp.zeros((), jnp.float32)),
+                jnp.arange(tcfg.grad_accum))
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss = loss / tcfg.grad_accum
+        else:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tokens, labels)
+        new_params, new_opt, metrics = adamw_update(tcfg.optimizer, grads,
+                                                    opt, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
+          mesh=None, seed: int = 0) -> Dict[str, float]:
+    """End-to-end training driver. Returns final metrics."""
+    key = jax.random.PRNGKey(seed)
+    with use_mesh(mesh):
+        params, axes = T.init_params(cfg, key)
+        if mesh is not None:
+            params = jax.device_put(params, param_sharding_tree(axes))
+        opt = adamw_init(params)
+        step_fn = jax.jit(make_train_step(cfg, tcfg))
+        data = make_dataset(dcfg)
+        metrics = {}
+        t0 = time.time()
+        losses = []
+        for step, (tokens, labels) in enumerate(data):
+            if step >= tcfg.steps:
+                break
+            params, opt, metrics = step_fn(params, opt, jnp.asarray(tokens),
+                                           jnp.asarray(labels))
+            losses.append(float(metrics["loss"]))
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"({time.time() - t0:.1f}s)")
+            if tcfg.ckpt_every and tcfg.ckpt_dir and \
+                    step and step % tcfg.ckpt_every == 0:
+                save_checkpoint(tcfg.ckpt_dir, params, opt, step)
+        if tcfg.ckpt_dir:
+            save_checkpoint(tcfg.ckpt_dir, params, opt, tcfg.steps)
+        return {"final_loss": losses[-1] if losses else float("nan"),
+                "first_loss": losses[0] if losses else float("nan"),
+                "mean_last10": float(jnp.mean(jnp.asarray(losses[-10:])))
+                if losses else float("nan")}

@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (reduced variants: 2-4 layers, d_model<=512,
+<=4 experts): one forward + one train step on CPU, asserting output shapes
+and absence of NaNs.  The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, PAPER_MODELS, get_config
+from repro.models import transformer as T
+from repro.models.frontends import fake_frontend_embeddings
+from repro.training.adamw import AdamWConfig, adamw_init, adamw_update
+
+ARCHS = sorted(ASSIGNED)
+
+
+def _inputs(cfg, key, b, s):
+    if cfg.frontend is not None:
+        return fake_frontend_embeddings(cfg, key, b, s)
+    return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512 and cfg.n_layers <= 4
+    for spec in cfg.pattern:
+        if spec.moe is not None:
+            assert spec.moe.num_experts <= 4
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    inp = _inputs(cfg, jax.random.PRNGKey(1), b, s)
+    logits, _, aux = T.forward(cfg, params, inp, mode="train")
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    key = jax.random.PRNGKey(1)
+    inp = _inputs(cfg, key, b, s)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                cfg.vocab_size)
+
+    def loss_fn(p):
+        return T.train_loss(cfg, p, inp, labels)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+    opt = adamw_init(params)
+    new_params, _, metrics = adamw_update(
+        AdamWConfig(lr=1e-4, warmup_steps=1, total_steps=10), grads, opt,
+        params)
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b_.astype(jnp.float32))))
+                for a, b_ in zip(jax.tree.leaves(new_params),
+                                 jax.tree.leaves(params)))
+    assert delta > 0, f"{arch}: params did not move"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_roundtrip(arch):
+    """Prefill + two decode steps: finite logits, cache positions advance."""
+    cfg = get_config(arch).reduced()
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 8
+    inp = _inputs(cfg, jax.random.PRNGKey(1), b, s)
+    caches = T.init_caches(cfg, batch=b, max_len=32, dtype=jnp.float32)
+    logits, caches, _ = T.forward(cfg, params, inp, mode="prefill",
+                                  caches=caches)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    for _ in range(2):
+        logits_d, caches = T.decode_step(cfg, params, tok, caches)
+        assert logits_d.shape == (b, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits_d).all())
+        tok = jnp.argmax(logits_d, -1).astype(jnp.int32)
+    pos = T._first_pos(caches)
+    assert int(pos) == s + 2
+
+
+@pytest.mark.parametrize("arch", sorted(PAPER_MODELS))
+def test_paper_model_param_counts(arch):
+    """Llama2 param counts must land near the advertised sizes."""
+    cfg = get_config(arch)
+    want = {"llama2-7b": 6.7e9, "llama2-13b": 13.0e9, "llama2-70b": 69e9}[arch]
+    got = cfg.param_count()
+    assert abs(got - want) / want < 0.06, (arch, got)
+
+
+def test_assigned_arch_table_matches_spec():
+    """The exact assigned hyperparameters (one guard per architecture)."""
+    spec = {
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    }
+    for arch, (nl, dm, nh, nkv, dff, vocab) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == nl, arch
+        assert cfg.d_model == dm, arch
+        assert cfg.n_heads == nh, arch
+        assert cfg.n_kv_heads == nkv, arch
+        assert cfg.d_ff == dff, arch
+        assert cfg.vocab_size == vocab, arch
+    # family-specific signatures
+    assert get_config("qwen3-0.6b").qk_norm
+    assert get_config("qwen1.5-32b").qkv_bias
+    assert get_config("gemma2-2b").attn_logit_softcap == 50.0
+    assert get_config("gemma2-2b").final_logit_softcap == 30.0
+    assert get_config("gemma2-2b").pattern[0].window == 4096
+    assert get_config("recurrentgemma-2b").pattern[0].kind == "rglru"
+    assert get_config("recurrentgemma-2b").pattern[2].kind == "attn"
+    assert get_config("xlstm-1.3b").pattern[7].kind == "slstm"
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.pattern[0].moe.num_experts == 384
+    assert kimi.pattern[0].moe.top_k == 8
+    assert kimi.param_count() > 0.9e12, "Kimi must be ~1T params"
+    gran = get_config("granite-moe-1b-a400m")
+    assert gran.pattern[0].moe.num_experts == 32
+    assert get_config("musicgen-large").frontend == "audio"
+    assert get_config("pixtral-12b").frontend == "vision"
+
+
+def test_swa_variant():
+    cfg = get_config("qwen3-0.6b", variant="swa")
+    assert all(s.window == 8192 for s in cfg.pattern)
+    base = get_config("qwen3-0.6b")
+    assert all(s.window is None for s in base.pattern)

@@ -1,0 +1,221 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.int8_matmul import quantize_int8
+
+K = jax.random.PRNGKey
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 128, 4, 4, 64),       # MHA, exact block multiple
+    (2, 200, 4, 2, 64),       # GQA, padded seq
+    (1, 384, 8, 1, 128),      # MQA, d=128
+    (1, 96, 2, 2, 32),        # seq < block
+])
+def test_flash_attention_matches_ref(b, s, h, kh, d, dtype):
+    ks = jax.random.split(K(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, d), dtype)
+    out = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(jnp.swapaxes(q, 1, 2),
+                                   jnp.swapaxes(k, 1, 2),
+                                   jnp.swapaxes(v, 1, 2))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(jnp.swapaxes(want, 1, 2), np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64, 128])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_attention_window_softcap(window, softcap):
+    b, s, h, kh, d = 1, 256, 4, 2, 64
+    ks = jax.random.split(K(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+    out = ops.flash_attention(q, k, v, window=window, softcap=softcap,
+                              interpret=True)
+    want = ref.flash_attention_ref(jnp.swapaxes(q, 1, 2),
+                                   jnp.swapaxes(k, 1, 2),
+                                   jnp.swapaxes(v, 1, 2),
+                                   window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.swapaxes(want, 1, 2)),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_block_shape_independence():
+    """Result must not depend on the BlockSpec tiling."""
+    b, s, h, kh, d = 1, 512, 2, 2, 64
+    ks = jax.random.split(K(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+    a = ops.flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    bq = ops.flash_attention(q, k, v, block_q=256, block_k=128, interpret=True)
+    c = ops.flash_attention(q, k, v, block_q=128, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bq), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kh,d,c,valid", [
+    (2, 4, 2, 64, 512, 512),
+    (1, 8, 1, 128, 700, 650),     # padded cache, partially filled
+    (4, 2, 2, 32, 64, 10),
+])
+def test_decode_attention_matches_ref(b, h, kh, d, c, valid, dtype):
+    ks = jax.random.split(K(3), 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, c, kh, d), dtype)
+    vc = jax.random.normal(ks[2], (b, c, kh, d), dtype)
+    key_pos = jnp.where(jnp.arange(c) < valid, jnp.arange(c), -1).astype(jnp.int32)
+    pos = jnp.asarray(valid - 1, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, key_pos, pos, block_c=256,
+                               interpret=True)
+    mask = (key_pos >= 0) & (key_pos <= pos)
+    want = ref.decode_attention_ref(q, kc, vc, mask[None])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ring_buffer_window():
+    """Ring-buffer semantics: slots hold non-monotonic positions."""
+    b, h, kh, d, c = 1, 2, 1, 32, 128
+    ks = jax.random.split(K(4), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, c, kh, d))
+    vc = jax.random.normal(ks[2], (b, c, kh, d))
+    pos = jnp.asarray(200, jnp.int32)           # wrapped: slot = pos % 128
+    key_pos = ((jnp.arange(c) + (201 // c) * c)
+               - jnp.where(jnp.arange(c) > 200 % c, c, 0)).astype(jnp.int32)
+    window = 50
+    out = ops.decode_attention(q, kc, vc, key_pos, pos, window=window,
+                               interpret=True)
+    mask = (key_pos >= 0) & (key_pos <= pos) & (key_pos > pos - window)
+    want = ref.decode_attention_ref(q, kc, vc, mask[None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU scan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,s,r", [(1, 16, 128), (2, 33, 200), (4, 7, 64),
+                                   (1, 128, 384)])
+def test_rglru_scan_matches_ref(b, s, r):
+    ks = jax.random.split(K(5), 3)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, r)))
+    bb = jax.random.normal(ks[1], (b, s, r))
+    h0 = jax.random.normal(ks[2], (b, r))
+    out = ops.rglru_scan(log_a, bb, h0, interpret=True)
+    want = ref.rglru_scan_ref(log_a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_scan_zero_init_equals_none():
+    ks = jax.random.split(K(6), 2)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (2, 9, 128)))
+    bb = jax.random.normal(ks[1], (2, 9, 128))
+    a = ops.rglru_scan(log_a, bb, None, interpret=True)
+    b2 = ops.rglru_scan(log_a, bb, jnp.zeros((2, 128)), interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b2), rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 40),
+       st.integers(1, 260))
+def test_rglru_scan_property(seed, b, s, r):
+    ks = jax.random.split(K(seed), 3)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, r)))
+    bb = jax.random.normal(ks[1], (b, s, r))
+    h0 = jax.random.normal(ks[2], (b, r))
+    out = ops.rglru_scan(log_a, bb, h0, interpret=True)
+    want = ref.rglru_scan_ref(log_a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# int8 matmul
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(128, 512, 128), (70, 300, 130),
+                                   (1, 1024, 256), (256, 64, 64)])
+def test_int8_matmul_matches_ref(m, k, n, dtype):
+    ks = jax.random.split(K(7), 2)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32)
+    wq, sc = quantize_int8(w)
+    out = ops.int8_matmul(x, wq, sc, interpret=True)
+    want = ref.int8_matmul_ref(x, wq, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_int8_quantization_error_bounded():
+    w = jax.random.normal(K(8), (256, 128))
+    wq, sc = quantize_int8(w)
+    w_deq = wq.astype(jnp.float32) * sc
+    # max per-element error is half a quantization step
+    step = np.asarray(sc)[0]
+    err = np.abs(np.asarray(w) - np.asarray(w_deq))
+    assert (err <= step / 2 + 1e-6).all()
+
+
+def test_int8_matmul_leading_dims():
+    x = jax.random.normal(K(9), (2, 3, 64))
+    w = jax.random.normal(K(10), (64, 32))
+    wq, sc = quantize_int8(w)
+    out = ops.int8_matmul(x, wq, sc, interpret=True)
+    assert out.shape == (2, 3, 32)
+
+
+# --------------------------------------------------------------------------- #
+# model-level: pallas impl == xla impl
+# --------------------------------------------------------------------------- #
+
+def test_model_forward_pallas_matches_xla():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("gemma2-2b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, K(11))
+    tokens = jax.random.randint(K(12), (2, 24), 0, cfg.vocab_size)
+    ref_logits, _, _ = T.forward(cfg, params, tokens, mode="train", impl="xla")
+    pal_logits, _, _ = T.forward(cfg, params, tokens, mode="train", impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal_logits), np.asarray(ref_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_block_pallas_matches_xla():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("recurrentgemma-2b").reduced(n_layers=3)
+    params, _ = T.init_params(cfg, K(13))
+    tokens = jax.random.randint(K(14), (2, 16), 0, cfg.vocab_size)
+    a, _, _ = T.forward(cfg, params, tokens, mode="train", impl="xla")
+    b = T.forward(cfg, params, tokens, mode="train", impl="pallas")[0]
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,121 @@
+"""Pipeline simulator invariants + paper-claimed qualitative behaviours."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import (StageCosts, simulate_pipeline,
+                                  simulate_sequential)
+
+
+def costs(prefill, decode, comm_p=None, comm_d=None, ret=0.0):
+    prefill = np.asarray(prefill, dtype=float)
+    decode = np.asarray(decode, dtype=float)
+    s = len(prefill)
+    comm_p = np.zeros(s - 1) if comm_p is None else np.asarray(comm_p, float)
+    comm_d = np.zeros(s - 1) if comm_d is None else np.asarray(comm_d, float)
+    return StageCosts(prefill, decode, comm_p, comm_d, ret)
+
+
+def test_sequential_latency_is_additive():
+    c = costs([1.0, 2.0], [0.1, 0.2], comm_p=[0.5], comm_d=[0.05], ret=0.01)
+    r = simulate_sequential(c, gen_tokens=10)
+    assert r.makespan == pytest.approx(3.5 + 10 * (0.3 + 0.05 + 0.01))
+
+
+def test_single_stage_pipeline_is_serial():
+    c = costs([1.0], [0.1])
+    r = simulate_pipeline(c, gen_tokens=4, n_microbatches=2, mb_batch=1)
+    assert r.makespan == pytest.approx(2 * 1.0 + 2 * 4 * 0.1)
+    assert r.tokens_generated == 2 * 5
+
+
+def test_nobubbles_never_slower_than_bubbles():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        s = rng.integers(2, 5)
+        c = costs(rng.uniform(0.5, 2.0, s), rng.uniform(0.05, 0.3, s),
+                  rng.uniform(0.0, 0.1, s - 1), rng.uniform(0.0, 0.05, s - 1),
+                  ret=rng.uniform(0, 0.05))
+        nb = simulate_pipeline(c, 8, 4, 1, schedule="nobubbles")
+        bb = simulate_pipeline(c, 8, 4, 1, schedule="bubbles")
+        assert nb.makespan <= bb.makespan + 1e-9
+        assert nb.throughput >= bb.throughput - 1e-9
+
+
+def test_nobubbles_strictly_faster_with_unbalanced_stages():
+    """Fig. 10: with real stage imbalance the no-bubble schedule wins."""
+    c = costs([1.0, 1.0, 1.0], [0.3, 0.1, 0.1])
+    nb = simulate_pipeline(c, 16, 4, 1, schedule="nobubbles")
+    bb = simulate_pipeline(c, 16, 4, 1, schedule="bubbles")
+    assert nb.throughput > bb.throughput * 1.01
+
+
+def test_pipeline_throughput_approaches_bottleneck_rate():
+    """Long-run decode throughput -> mb_batch / max stage decode time."""
+    c = costs([1.0, 1.0], [0.2, 0.1])
+    r = simulate_pipeline(c, gen_tokens=400, n_microbatches=8, mb_batch=2,
+                          schedule="nobubbles")
+    # bottleneck stage: 0.2 s/step; 8 microbatches pipelined => steady state
+    steady = 2 / 0.2
+    assert r.throughput == pytest.approx(steady, rel=0.15)
+
+
+def test_pipeline_dominates_sequential_in_throughput():
+    c = costs([1.0, 1.0], [0.1, 0.1], comm_p=[0.1], comm_d=[0.01])
+    seq = simulate_sequential(c, gen_tokens=50)
+    pipe = simulate_pipeline(c, gen_tokens=50, n_microbatches=4, mb_batch=1)
+    assert pipe.throughput > seq.throughput
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 5),
+       st.integers(1, 20))
+def test_pipeline_conservation_and_bounds(seed, s, n_mb, gen):
+    rng = np.random.default_rng(seed)
+    c = costs(rng.uniform(0.1, 2.0, s), rng.uniform(0.01, 0.5, s),
+              rng.uniform(0.0, 0.2, s - 1), rng.uniform(0.0, 0.1, s - 1),
+              ret=rng.uniform(0.0, 0.1))
+    r = simulate_pipeline(c, gen, n_mb, 1)
+    assert r.tokens_generated == (gen + 1) * n_mb
+    # lower bound: device busy time of the bottleneck stage
+    busy = max(float(c.prefill[i] + gen * c.decode[i]) for i in range(s)) * n_mb
+    assert r.makespan >= busy - 1e-9
+    # upper bound: fully serial execution
+    serial = n_mb * (c.prefill.sum() + c.comm_prefill.sum() + c.return_comm
+                     + gen * (c.decode.sum() + c.comm_decode.sum()
+                              + c.return_comm))
+    assert r.makespan <= serial + 1e-6
+
+
+def test_roofline_is_baseline_filter():
+    """Perf-variant dry-run records never leak into the baseline tables."""
+    from benchmarks.roofline import is_baseline
+    base = {"ok": True, "arch": "qwen3-0.6b", "shape": "train_4k"}
+    assert is_baseline(base)
+    assert is_baseline({**base, "arch": "qwen3-0.6b+swa",
+                        "shape": "long_500k"})
+    assert not is_baseline({**base, "arch": "qwen3-0.6b+swa"})  # wrong shape
+    assert not is_baseline({**base, "arch": "qwen3-0.6b+kvint8"})
+    assert not is_baseline({**base, "rules_variant": "decode-seq-model"})
+    assert not is_baseline({**base, "fsdp_gather": True})
+    assert not is_baseline({**base, "impl": "chunked"})
+    assert not is_baseline({**base, "mode": "pipeline-even"})
+    assert not is_baseline({**base, "ok": False})
+
+
+def test_collective_bytes_parser():
+    """HLO collective parser: operand bytes per kind, all-gather divided by
+    group size, -start forms counted, non-collectives ignored."""
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  %ag = (f32[4,4]) all-gather-start(%y), replica_groups=[2,4]<=[8]
+  %cp = f32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 128 * 2
+    assert out["all-gather"] == 4 * 4 * 4 / 4          # /group_size 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["all-to-all"] == 0
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")

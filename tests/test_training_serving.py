@@ -1,0 +1,163 @@
+"""Training loop, optimizer, checkpointing, data pipeline, serving engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import ContinuousBatcher, Request, SamplingParams, ServeEngine
+from repro.training import (AdamWConfig, DataConfig, TrainConfig, adamw_init,
+                            adamw_update, latest_checkpoint, make_dataset,
+                            restore_checkpoint, save_checkpoint, train)
+
+
+def test_train_loss_decreases():
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    tc = TrainConfig(steps=25, log_every=0,
+                     optimizer=AdamWConfig(lr=1e-3, warmup_steps=5,
+                                           total_steps=25))
+    # data support restricted to 64 tokens (subset of the model's 512-vocab)
+    # so the marginal is learnable within 25 steps; the affine per-stream
+    # structure is what the loss keeps descending on after that.
+    dc = DataConfig(vocab_size=64, seq_len=32, batch=8)
+    m = train(cfg, tc, dc)
+    assert m["final_loss"] < m["first_loss"] * 0.8
+
+
+def test_grad_accum_equivalence():
+    """grad_accum=2 over batch 8 == one step over the same batch 8."""
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, batch=8)
+    tokens, labels = make_dataset(dc).batch_at(0)
+    from repro.training.train_loop import make_train_step
+    tc1 = TrainConfig(grad_accum=1)
+    tc2 = TrainConfig(grad_accum=2)
+    p1, _, m1 = jax.jit(make_train_step(cfg, tc1))(params, opt,
+                                                   jnp.asarray(tokens),
+                                                   jnp.asarray(labels))
+    p2, _, m2 = jax.jit(make_train_step(cfg, tc2))(params, opt,
+                                                   jnp.asarray(tokens),
+                                                   jnp.asarray(labels))
+    # same loss; params close (grad-accum normalizes by microbatches)
+    assert m1["loss"] == pytest.approx(float(m2["loss"]), rel=1e-5)
+    a = np.concatenate([np.ravel(x) for x in jax.tree.leaves(p1)])
+    b = np.concatenate([np.ravel(x) for x in jax.tree.leaves(p2)])
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=0,
+                      total_steps=1, grad_clip=0.0)
+    new, _, _ = adamw_update(cfg, grads, opt, params)
+    assert float(new["w"][0, 0]) < 1.0        # decayed
+    assert float(new["b"][0]) == pytest.approx(1.0)  # not decayed
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("granite-moe-1b-a400m").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    with tempfile.TemporaryDirectory() as d:
+        f = save_checkpoint(d, params, opt, step=7, extra={"note": "x"})
+        assert latest_checkpoint(d) == f
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        zopt = adamw_init(zeros)
+        p2, o2, step = restore_checkpoint(f, zeros, zopt)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_determinism_and_shapes():
+    dc = DataConfig(vocab_size=100, seq_len=16, batch=4, seed=3)
+    ds = make_dataset(dc)
+    a1, b1 = ds.batch_at(5)
+    a2, b2 = ds.batch_at(5)
+    np.testing.assert_array_equal(a1, a2)
+    assert a1.shape == (4, 16) and b1.shape == (4, 16)
+    assert (a1 >= 0).all() and (a1 < 100).all()
+    # labels are the next-token shift of the same stream
+    a3, b3 = ds.batch_at(6)
+    assert not np.array_equal(a1, a3)
+
+
+def test_byte_corpus(tmp_path):
+    p = tmp_path / "corpus.txt"
+    p.write_bytes(b"hello world, this is a tiny corpus for the tests! " * 40)
+    dc = DataConfig(vocab_size=256, seq_len=8, batch=2,
+                    corpus_path=str(p))
+    ds = make_dataset(dc)
+    x, y = ds.batch_at(0)
+    assert x.shape == (2, 8)
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+def test_serve_engine_generate_greedy_deterministic():
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    a = eng.generate(prompts, SamplingParams(max_tokens=6))
+    b = eng.generate(prompts, SamplingParams(max_tokens=6))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 6)
+
+
+def test_serve_engine_generate_matches_manual_decode():
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    out = eng.generate(prompts, SamplingParams(max_tokens=4))
+    # manual: prefill, then argmax-decode
+    caches = T.init_caches(cfg, 2, 64, jnp.float32)
+    logits, caches, _ = T.forward(cfg, params, jnp.asarray(prompts),
+                                  mode="prefill", caches=caches)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    want = [np.asarray(tok)]
+    for _ in range(3):
+        logits, caches = T.decode_step(cfg, params, tok, caches)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        want.append(np.asarray(tok))
+    np.testing.assert_array_equal(out.T, np.stack(want))
+
+
+def test_continuous_batcher_serves_all_requests():
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    sched = ContinuousBatcher(eng, prompt_len=8)
+    rng = np.random.default_rng(2)
+    for uid in range(5):
+        sched.submit(Request(uid, rng.integers(0, cfg.vocab_size, 8)
+                             .astype(np.int32),
+                             SamplingParams(max_tokens=4)))
+    done = sched.run()
+    assert sorted(done) == list(range(5))
+    assert all(len(r.generated) >= 4 for r in done.values())
+    assert sched.stats.served == 5
+    assert sched.stats.utilization > 0.5
+
+
+def test_score_loglikelihood():
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                              cfg.vocab_size)
+    ll = eng.score(toks)
+    assert ll.shape == (2,)
+    assert bool((ll < 0).all())
