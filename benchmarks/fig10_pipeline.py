@@ -1,6 +1,13 @@
 """Fig. 10 reproduction: EdgeShard-No-bubbles vs EdgeShard-Bubbles pipeline
 execution for Llama2-7B/13B (1 Mbps cloud bandwidth).
 
+Both schedules run through the serving stack itself — ``ContinuousBatcher``
+over a ``SimBackend`` materialized from the DP plan with
+``runtime.from_deployment`` — so the scheduling comparison exercises the
+identical request path the real backends serve.  The batcher's continuous
+admission *is* No-bubbles; ``schedule="bubbles"`` adds the Fig. 5(a)
+iteration barrier inside the backend.
+
 Validated claim: No-bubbles throughput >= Bubbles for every collaborative
 method, strictly better for the EdgeShard plan.
 """
@@ -12,10 +19,12 @@ import numpy as np
 
 from repro.configs import PAPER_MODELS
 from repro.core.devices import MBPS, paper_testbed
-from repro.core.partition import solve_throughput
-from repro.core.planner import build_problem
-from repro.core.profile import ModelProfile, Workload
-from repro.core.simulator import build_stage_costs, simulate_pipeline
+from repro.core.planner import plan_deployment
+from repro.core.profile import Workload
+from repro.runtime import from_deployment
+from repro.serving import ContinuousBatcher, Request, SamplingParams
+
+N_MICROBATCHES = 8
 
 
 def run(verbose: bool = True) -> Dict[str, Dict[str, float]]:
@@ -24,17 +33,21 @@ def run(verbose: bool = True) -> Dict[str, Dict[str, float]]:
     out: Dict[str, Dict[str, float]] = {}
     for name in ("llama2-7b", "llama2-13b"):
         cfg = PAPER_MODELS[name]
-        prob = build_problem(cfg, cluster, workload)
-        plan = solve_throughput(prob)
-        profile = ModelProfile.from_config(cfg, workload)
-        mem = np.array([d.memory_bytes for d in cluster.devices])
-        mb = max(profile.max_batch_for(mem, plan.assignment, cluster), 1)
-        costs = build_stage_costs(profile, cluster, plan, mb_batch=mb)
+        dep = plan_deployment(cfg, cluster, workload, objective="throughput")
         res = {}
         for schedule in ("bubbles", "nobubbles"):
-            sim = simulate_pipeline(costs, workload.gen_tokens,
-                                    n_microbatches=8, mb_batch=mb,
-                                    schedule=schedule)
+            backend = from_deployment(dep, cluster, cfg, kind="sim",
+                                      workload=workload,
+                                      n_slots=N_MICROBATCHES,
+                                      schedule=schedule)
+            batcher = ContinuousBatcher(backend, prompt_len=workload.prompt_len)
+            prompt = np.zeros(workload.prompt_len, np.int32)
+            for uid in range(N_MICROBATCHES):
+                batcher.submit(Request(uid, prompt,
+                                       SamplingParams(
+                                           max_tokens=workload.gen_tokens)))
+            batcher.run()
+            sim = backend.sim_result()
             res[schedule] = sim.throughput
             if verbose:
                 print(f"fig10,{name},{schedule},{sim.throughput:.2f},"

@@ -1,11 +1,15 @@
-"""End-to-end driver: serve a small model with batched requests through the
-EdgeShard shard_map pipeline (no-bubbles decode over 8 XLA devices).
+"""End-to-end driver: serve batched requests through the unified runtime on
+the EdgeShard shard_map pipeline (no-bubbles decode over 8 XLA devices).
 
 This is the paper's deployment mode on the TPU-native runtime:
 1. plan an (uneven) stage partition with the throughput DP,
-2. restack params into per-stage slabs on a (data, model) mesh,
-3. stream micro-batched requests through the no-bubbles tick protocol,
-4. cross-check every generated token against single-device decode.
+2. ``runtime.from_deployment`` turns the plan into a running
+   ``PipelineBackend`` (params restacked into per-stage slabs),
+3. ``ContinuousBatcher`` streams requests through the no-bubbles tick
+   protocol — more requests than micro-batch slots, so slots are recycled
+   mid-flight,
+4. cross-check every generated token against the TensorBackend (single
+   engine) serving the identical requests.
 
 Must run in its own process (needs 8 host devices):
     PYTHONPATH=src python examples/serve_pipeline.py
@@ -16,72 +20,62 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.configs import get_config
-from repro.core import pipeline as PL
 from repro.core.devices import tpu_pod_cluster
-from repro.core.partition import solve_throughput
-from repro.core.planner import build_problem
+from repro.core.planner import plan_deployment
 from repro.core.profile import Workload
 from repro.models import transformer as T
+from repro.serving import ContinuousBatcher, Request, SamplingParams
+
+
+def serve(backend, prompts, gen, seed=0):
+    batcher = ContinuousBatcher(backend, prompt_len=prompts.shape[1],
+                                seed=seed)
+    for uid in range(len(prompts)):
+        batcher.submit(Request(uid, prompts[uid],
+                               SamplingParams(max_tokens=gen)))
+    t0 = time.time()
+    done = batcher.run()
+    dt = time.time() - t0
+    toks = np.stack([done[u].generated for u in range(len(prompts))])
+    return toks, dt, batcher.stats
 
 
 def main():
     cfg = get_config("qwen3-0.6b").reduced(n_layers=8, max_d_model=256)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
     n_stages = 4
 
     # 1. plan the partition with the paper's throughput DP over a 4-chip
-    #    homogeneous "cluster" (uneven only if the cost model says so; force
-    #    an uneven layout here to exercise the mechanism)
-    prob = build_problem(cfg, tpu_pod_cluster(n_chips=n_stages),
-                         Workload(dtype_bytes=2))
-    plan = solve_throughput(prob)
-    spec = PL.spec_from_plan(cfg, plan, n_stages)
-    print(f"stage layout (periods per stage): {spec.periods_per_stage}")
+    #    homogeneous "cluster" profile
+    cluster = tpu_pod_cluster(n_chips=n_stages)
+    dep = plan_deployment(cfg, cluster, Workload(dtype_bytes=2),
+                          objective="throughput")
 
-    # 2. restack params into stage slabs
-    stage_params, mask = PL.stack_stage_params(cfg, params, spec)
+    # 2. plan -> running backend in one call
+    mesh = jax.make_mesh((1, n_stages), ("data", "model"))
+    backend = runtime.from_deployment(dep, cluster, cfg, kind="pipeline",
+                                      params=params, mesh=mesh, max_len=64)
+    print(f"stage layout (periods per stage): "
+          f"{backend.spec.periods_per_stage}")
 
-    # 3. no-bubbles decode: M micro-batches in flight
-    M, mb, max_len, gen = 4, 2, 64, 8
+    # 3. continuous batching: 8 requests over 4 micro-batch slots
+    n_req, plen, gen = 8, 4, 8
     rng = np.random.default_rng(0)
-    first = rng.integers(0, cfg.vocab_size, size=(M, mb)).astype(np.int32)
-    tick_fn = jax.jit(lambda st, feed: PL.pipeline_decode_tick(
-        cfg, stage_params, mask, st, feed, spec, mesh))
-    with mesh:
-        state = PL.init_pipeline_decode_state(cfg, spec, M, mb, max_len,
-                                              dtype=jnp.float32)
-        cur = {m: first[m] for m in range(M)}
-        got = {m: [] for m in range(M)}
-        t0 = time.time()
-        t = 0
-        while not all(len(got[m]) >= gen for m in range(M)):
-            f = t % M
-            state = tick_fn(state, jnp.asarray(cur[f]))
-            dm = (t - (spec.n_stages - 1)) % M
-            if t >= spec.n_stages - 1 and len(got[dm]) < gen:
-                tok = np.asarray(state.tokens_out[dm])
-                got[dm].append(tok)
-                cur[dm] = tok
-            t += 1
-        dt = time.time() - t0
-    total = M * mb * gen
-    print(f"pipeline: {total} tokens in {t} ticks / {dt:.2f}s "
-          f"({total / dt:.1f} tok/s on CPU-interpreted SPMD)")
+    prompts = rng.integers(0, cfg.vocab_size, (n_req, plen)).astype(np.int32)
+    toks, dt, stats = serve(backend, prompts, gen)
+    total = toks.size
+    print(f"pipeline: {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on CPU-interpreted SPMD) — {stats}")
 
-    # 4. verify against single-device decode
-    for m in range(M):
-        caches = T.init_caches(cfg, mb, max_len, jnp.float32)
-        tok = jnp.asarray(first[m])
-        for g in range(gen):
-            logits, caches = T.decode_step(cfg, params, tok, caches)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            np.testing.assert_array_equal(np.asarray(tok), got[m][g])
-    print("all pipeline tokens match single-device decode — OK")
+    # 4. verify against the tensor backend serving the same requests
+    ref_backend = runtime.TensorBackend(cfg, params, n_slots=4, max_len=64)
+    ref, _, _ = serve(ref_backend, prompts, gen)
+    np.testing.assert_array_equal(toks, ref)
+    print("all pipeline tokens match the tensor backend — OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Version compatibility shims for the jax APIs this repo leans on.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and renamed ``check_rep`` -> ``check_vma``) across jax releases; the repo
+targets both sides of that move so the pipeline runtime and MoE EP path run
+on the pinned 0.4.x toolchain as well as newer jax.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """Call jax's shard_map, translating the validity-check kwarg.
+
+    ``check_vma`` (new name) is forwarded as ``check_rep`` on jax versions
+    that predate the rename; all other kwargs pass through untouched.
+    """
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -31,8 +31,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core.partition import Plan
 from repro.models import transformer as tmod
@@ -294,13 +295,21 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
                          mesh: Mesh, stage_axis: str = "model",
                          batch_axes: Tuple[str, ...] = ("data",),
                          impl: str = "xla",
-                         vocab_sharded: bool = False) -> PipelineDecodeState:
+                         vocab_sharded: bool = False,
+                         feed_valid: Optional[jax.Array] = None,
+                         ) -> PipelineDecodeState:
     """One no-bubbles decode tick.
 
     Stage 0 ingests ``feed_tokens [mb]`` for micro-batch ``tick % M``; every
     stage advances the micro-batch riding in its buffer; the last stage
     samples greedily and the token rides the ring back to stage 0 where it is
     recorded in ``tokens_out`` (the paper's return-to-source hop).
+
+    ``feed_valid`` (scalar bool, default True) marks this tick's ingested
+    micro-batch as live.  The serving runtime feeds dead ticks with
+    ``feed_valid=False`` when a micro-batch slot has no active request, so
+    the garbage activation rides the ring without touching KV caches or
+    ``tokens_out`` — the same warm-up validity mechanism, driven externally.
 
     ``vocab_sharded`` (§Perf-C2, beyond-paper): shard the embedding table
     (rows) and LM head (columns) over the *stage* axis so each stage reads
@@ -315,6 +324,8 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
     m = state.tokens_out.shape[0]
     if vocab_sharded:
         assert cfg.vocab_size % ns == 0, (cfg.vocab_size, ns)
+    if feed_valid is None:
+        feed_valid = jnp.ones((), bool)
 
     stack_specs = jax.tree.map(lambda _: P(stage_axis), stage_params["stack"])
     cache_specs = _cache_pspecs(cfg, stage_axis, batch_axes)
@@ -327,7 +338,7 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
             other_specs["lm_head"] = P(None, stage_axis)    # [d, V] cols
 
     def body(stack_local, embed_etc, mask_local, caches_l, buf_l, buf_mb_l,
-             buf_valid_l, feed, tick):
+             buf_valid_l, feed, fvalid, tick):
         sid = jax.lax.axis_index(stage_axis)
         params_l = dict(embed_etc)
         params_l["stack"] = jax.tree.map(lambda x: x[0], stack_local)
@@ -356,7 +367,7 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
         is_first = sid == 0
         x_in = jnp.where(is_first, x_embed.astype(buf.dtype), buf)[:, None, :]
         mb_idx = jnp.where(is_first, fresh_mb, my_mb)
-        valid = jnp.where(is_first, True, my_valid)
+        valid = jnp.where(is_first, fvalid, my_valid)
 
         def scan_body(x_c, inp):
             layer_params, layer_caches, lvalid = inp
@@ -432,13 +443,14 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
         body, mesh=mesh,
         in_specs=(stack_specs, other_specs, P(stage_axis, None), cache_specs,
                   P(stage_axis, batch_axes, None), P(stage_axis),
-                  P(stage_axis), P(batch_axes), P()),
+                  P(stage_axis), P(batch_axes), P(), P()),
         out_specs=(cache_specs,
                    P(stage_axis, batch_axes, None), P(stage_axis),
                    P(stage_axis), P(None, batch_axes), P(None)),
         check_vma=False,
     )(stage_params["stack"], other, mask, state.caches, state.buf,
-      state.buf_mb, state.buf_valid, feed_tokens, state.tick)
+      state.buf_mb, state.buf_valid, feed_tokens,
+      jnp.asarray(feed_valid, bool), state.tick)
     new_caches, buf, buf_mb, buf_valid, tok_update, ready = out
 
     tokens_out = jnp.where(ready[:, None], tok_update, state.tokens_out)

@@ -41,20 +41,12 @@ PyTree = Any
 
 def dp_pipeline_spec(cfg: ModelConfig, n_stages: int) -> pl.PipelineSpec:
     """DP-derived (possibly uneven) stage layout from the throughput planner
-    run over a homogeneous n_stages-device TPU cluster profile."""
+    run over a homogeneous n_stages-device TPU cluster profile (delegates to
+    the runtime factory so dryrun and serving share one planner->spec path)."""
     from repro.core.devices import tpu_pod_cluster
-    from repro.core.partition import solve_throughput
-    from repro.core.planner import build_problem
-    from repro.core.profile import Workload
+    from repro.runtime import plan_pipeline_spec
 
-    cluster = tpu_pod_cluster(n_stages)
-    prob = build_problem(cfg, cluster, Workload(dtype_bytes=2))
-    plan = solve_throughput(prob)
-    if not len(plan.assignment):
-        raise ValueError(
-            f"{cfg.name}: infeasible on {n_stages} chips (memory) — "
-            f"DP found no plan; use more stages/chips or quantize")
-    return pl.spec_from_plan(cfg, plan, n_stages)
+    return plan_pipeline_spec(cfg, tpu_pod_cluster(n_stages), n_stages)
 
 
 def run_pipeline_one(arch: str, shape_name: str, multi_pod: bool = False,

@@ -1,5 +1,13 @@
-"""Serving launcher: batched generation through the ServeEngine (TP mode)
-or the EdgeShard stage pipeline (paper mode).
+"""Serving launcher: batched generation through the unified runtime.
+
+Both modes route through ``ContinuousBatcher`` over an
+``repro.runtime.InferenceBackend`` — the launcher owns no generation loop:
+
+- ``--mode tp``        TensorBackend (pjit tensor-parallel / single device),
+- ``--mode pipeline``  PipelineBackend: the paper's deployment mode — the
+  throughput DP plans (possibly uneven) stages over a cluster profile and
+  ``runtime.from_deployment`` materializes the plan as a running no-bubbles
+  stage pipeline.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode tp --batch 4 --gen 16 [--kvint8]
@@ -16,7 +24,11 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mode", default="tp", choices=["tp", "pipeline"])
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to serve")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="backend slots (default: batch for tp, "
+                         "stages for pipeline)")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
@@ -34,11 +46,12 @@ def main():
     import dataclasses
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
+    from repro import runtime
     from repro.configs import get_config
     from repro.models import transformer as T
+    from repro.serving import ContinuousBatcher, Request, SamplingParams
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -51,70 +64,50 @@ def main():
                            (args.batch, args.prompt_len)).astype(np.int32)
 
     if args.mode == "tp":
-        from repro.serving import SamplingParams, ServeEngine
         mesh = None
         if args.devices:
             mesh = jax.make_mesh((1, args.devices), ("data", "model"))
-        eng = ServeEngine(cfg, params, max_batch=args.batch,
-                          max_len=args.max_len, mesh=mesh)
-        sp = SamplingParams(max_tokens=args.gen)
-        t0 = time.time()
-        out = eng.generate(prompts, sp, seed=args.seed)
-        dt = time.time() - t0
-        print(f"generated {out.shape} in {dt:.2f}s "
-              f"({args.batch * args.gen / dt:.1f} tok/s)")
-        print(out[:, :10])
-        return
+        backend = runtime.TensorBackend(
+            cfg, params, n_slots=args.slots or args.batch,
+            max_len=args.max_len, mesh=mesh)
+    else:
+        # planner -> backend: the DP chooses the (possibly uneven) stage
+        # layout over a homogeneous cluster profile of --stages chips
+        from repro.core.devices import tpu_pod_cluster
+        from repro.core.planner import plan_deployment
+        from repro.core.profile import Workload
+        assert args.devices >= args.stages, \
+            f"--mode pipeline needs --devices >= --stages ({args.stages})"
+        cluster = tpu_pod_cluster(n_chips=args.stages)
+        dep = plan_deployment(cfg, cluster,
+                              Workload(prompt_len=args.prompt_len,
+                                       gen_tokens=args.gen, dtype_bytes=2),
+                              objective="throughput")
+        # request-granular slots need lanes=1, so the mesh carries stages
+        # only; data-parallel lanes over spare devices are a ROADMAP item
+        n_stages = len(dep.plan.stages)
+        if args.devices > n_stages:
+            print(f"note: using {n_stages} of {args.devices} devices "
+                  f"(stage axis only; no data-parallel lanes yet)")
+        mesh = jax.make_mesh((1, n_stages), ("data", "model"))
+        backend = runtime.from_deployment(
+            dep, cluster, cfg, kind="pipeline", params=params, mesh=mesh,
+            n_slots=args.slots or None, max_len=args.max_len)
+        print(f"planned stages (periods per stage): "
+              f"{backend.spec.periods_per_stage}")
 
-    # pipeline mode: prefill per micro-batch, then no-bubbles tick decode
-    from repro.core import pipeline as PL
-    assert args.devices, "--mode pipeline needs --devices"
-    mesh = jax.make_mesh((args.devices // args.stages, args.stages),
-                         ("data", "model"))
-    spec = PL.even_pipeline_spec(cfg, args.stages)
-    stage_params, mask = PL.stack_stage_params(cfg, params, spec)
-    M = args.stages                       # no-bubbles occupancy
-    assert args.batch % M == 0
-    mb = args.batch // M
-    data_size = args.devices // args.stages
-    assert mb % data_size == 0, (
-        f"micro-batch {mb} must divide over the data axis ({data_size}); "
-        f"use --batch >= {M * data_size}")
-    with mesh:
-        state = PL.init_pipeline_decode_state(cfg, spec, M, mb, args.max_len,
-                                              dtype=jnp.float32)
-        # prefill each micro-batch through the plain decoder to fill caches
-        # (prompt processing), then stream ticks for generation.
-        feeds = prompts.reshape(M, mb, args.prompt_len)
-        outs = {m: [] for m in range(M)}
-        t0 = time.time()
-        # feed prompt tokens one tick at a time (teacher-forced prefill),
-        # then let generated tokens ride the ring
-        steps = args.prompt_len + 1
-        total = M * args.gen + spec.n_stages + M
-        rounds = {m: 0 for m in range(M)}
-        for t in range(M * (args.prompt_len + args.gen) + spec.n_stages + M):
-            f = t % M
-            r = rounds[f]
-            if r < args.prompt_len:
-                feed = jnp.asarray(feeds[f, :, r])
-            else:
-                feed = jnp.asarray(state.tokens_out[f])    # generated token
-            rounds[f] += 1
-            state = PL.pipeline_decode_tick(cfg, stage_params, mask, state,
-                                            feed, spec, mesh)
-            dm = (t - (spec.n_stages - 1)) % M
-            done_round = rounds[dm] - 1
-            if t >= spec.n_stages - 1 and done_round >= args.prompt_len \
-                    and len(outs[dm]) < args.gen:
-                outs[dm].append(np.asarray(state.tokens_out[dm]))
-            if all(len(outs[m]) >= args.gen for m in range(M)):
-                break
-        dt = time.time() - t0
-    toks = np.stack([np.stack(outs[m]) for m in range(M)])
-    print(f"pipeline generated {toks.shape} (M, gen, mb) in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s on CPU-interpreted SPMD)")
-    print(toks[0, :, 0])
+    batcher = ContinuousBatcher(backend, prompt_len=args.prompt_len,
+                                seed=args.seed)
+    sp = SamplingParams(max_tokens=args.gen)
+    for uid in range(args.batch):
+        batcher.submit(Request(uid, prompts[uid], sp))
+    t0 = time.time()
+    done = batcher.run()
+    dt = time.time() - t0
+    out = np.stack([done[u].generated for u in range(args.batch)])
+    print(f"served {len(done)} requests, {out.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s) — {batcher.stats}")
+    print(out[:, :10])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""Unified serving runtime: one backend protocol over the tensor-parallel
+engine, the EdgeShard stage pipeline, and the planner's cost simulator."""
+from repro.runtime.base import (BackendInfo, InferenceBackend, SlotEvent)
+from repro.runtime.factory import from_deployment, plan_pipeline_spec
+from repro.runtime.sim import SimBackend
+
+__all__ = [
+    "BackendInfo", "InferenceBackend", "SlotEvent",
+    "from_deployment", "plan_pipeline_spec", "SimBackend",
+    "TensorBackend", "PipelineBackend",
+]
+
+
+def __getattr__(name):
+    # jax-heavy backends import lazily so planner/benchmark code can use
+    # SimBackend + from_deployment(kind="sim") without touching jax
+    if name == "TensorBackend":
+        from repro.runtime.tensor import TensorBackend
+        return TensorBackend
+    if name == "PipelineBackend":
+        from repro.runtime.pipeline_backend import PipelineBackend
+        return PipelineBackend
+    raise AttributeError(name)

@@ -1,0 +1,92 @@
+"""The runtime seam: one backend protocol for every execution path.
+
+An :class:`InferenceBackend` owns model state (weights + per-slot KV caches)
+and exposes a *slot-granular* serving interface.  A slot is one independent
+request stream with its own cache positions; the scheduler above
+(``serving.ContinuousBatcher``) owns request queues, sampling state, and slot
+recycling, and never touches jax directly.
+
+The protocol is event-driven rather than batch-lockstep because the paper's
+no-bubbles pipeline is inherently skewed: one tick feeds one micro-batch and
+completes (at most) one other.  Backends advance by their natural quantum —
+
+- ``TensorBackend``   quantum = one batched decode step (all slots),
+- ``PipelineBackend`` quantum = one no-bubbles tick (one stage ring shift),
+- ``SimBackend``      quantum = one simulated decode round —
+
+and report finished work as :class:`SlotEvent` s.  A backend that samples
+in-SPMD (the pipeline's last-stage greedy argmax riding the token ring)
+returns ``token``; a backend that exposes logits returns ``logits`` and the
+scheduler applies the request's own sampling params.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class SlotEvent:
+    """One slot produced its next token (or the logits to sample it from)."""
+
+    slot: int
+    logits: Optional[np.ndarray] = None   # [V] float — scheduler samples
+    token: Optional[int] = None           # pre-sampled (greedy in-SPMD)
+
+    def __post_init__(self):
+        assert (self.logits is not None) or (self.token is not None)
+
+
+@dataclass(frozen=True)
+class BackendInfo:
+    """Capacity / memory metadata the scheduler and planner can introspect."""
+
+    n_slots: int
+    max_len: int
+    cache_bytes_per_slot: int = 0
+    param_bytes: int = 0
+    samples_in_backend: bool = False   # True -> events carry tokens, not logits
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.cache_bytes_per_slot * self.n_slots
+
+
+class InferenceBackend(abc.ABC):
+    """Slot-granular prefill/decode over a fixed model deployment."""
+
+    @property
+    @abc.abstractmethod
+    def info(self) -> BackendInfo:
+        ...
+
+    @property
+    def n_slots(self) -> int:
+        return self.info.n_slots
+
+    @abc.abstractmethod
+    def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                ) -> List[SlotEvent]:
+        """Admit ``prompts[i]`` (shape [S], int32) into ``slots[i]``.
+
+        Resets each slot's cache state.  Backends that process prompts
+        synchronously return one event per slot (logits after the last
+        prompt token); pipelined backends may return ``[]`` and emit the
+        first token from a later ``decode_step``.
+        """
+
+    @abc.abstractmethod
+    def decode_step(self, feeds: Dict[int, int]) -> List[SlotEvent]:
+        """Advance one quantum, consuming per-slot input tokens from
+        ``feeds`` as needed.  ``feeds[slot]`` is the last sampled token of
+        the request in ``slot``; entries persist until the slot is freed, so
+        backends with internal skew read them when the slot's turn comes.
+        """
+
+    @abc.abstractmethod
+    def free_slot(self, slot: int) -> None:
+        """Release a slot for reuse.  Backends must tolerate subsequent
+        quanta before the slot is re-prefilled."""

@@ -1,0 +1,169 @@
+"""PipelineBackend: the EdgeShard stage pipeline (planner-chosen, possibly
+uneven stages; no-bubbles tick decode) behind the runtime backend protocol.
+
+A *slot* is one micro-batch of the tick protocol — the natural admission
+granularity, because each micro-batch owns its cache positions inside the
+stage-stacked KV layout (``caches[stage, layer, M, ...]``).  With
+``lanes=1`` (the scheduler's configuration) a slot serves exactly one
+request stream.
+
+Prompt processing is teacher-forced through the same tick path the paper
+uses for generation: each of the slot's turns feeds the next prompt token;
+outputs before the last prompt token are discarded.  Slots with no active
+request tick with ``feed_valid=False`` so garbage activations ride the ring
+without touching KV caches — which also makes slot *recycling* safe: a
+freed slot's caches are reset on admission and nothing in flight can write
+to them afterwards.
+
+The quantum is one tick.  Each ``decode_step`` feeds micro-batch
+``tick % M`` and completes (at most) the micro-batch fed ``n_stages - 1``
+ticks ago, whose greedily sampled token rode the ring back to stage 0 — so
+events carry ``token``, not ``logits`` (greedy-only, like the paper's
+last-stage sampling).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as PL
+from repro.models.config import ModelConfig
+from repro.runtime.base import BackendInfo, InferenceBackend, SlotEvent
+
+PyTree = Any
+
+
+class PipelineBackend(InferenceBackend):
+    """No-bubbles stage-pipeline decode with micro-batch-granular slots."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, spec: PL.PipelineSpec,
+                 mesh, *, n_slots: Optional[int] = None, lanes: int = 1,
+                 max_len: int = 256, cache_dtype=jnp.float32,
+                 stage_axis: str = "model",
+                 batch_axes: Tuple[str, ...] = ("data",), impl: str = "xla"):
+        m = n_slots or spec.n_stages
+        assert m >= spec.n_stages, \
+            f"need >= {spec.n_stages} micro-batch slots for no bubbles"
+        self.cfg = cfg
+        self.spec = spec
+        self.mesh = mesh
+        self.lanes = lanes
+        self.max_len = max_len
+        self._m = m
+
+        with mesh:
+            self.stage_params, self.mask = PL.stack_stage_params(cfg, params,
+                                                                 spec)
+            self.state = PL.init_pipeline_decode_state(cfg, spec, m, lanes,
+                                                       max_len, cache_dtype)
+        # pristine per-slot cache slice for admission-time resets (all slots
+        # of a fresh state are identical)
+        self._fresh_slot = jax.tree.map(lambda x: x[:, :, 0],
+                                        self.state.caches)
+
+        def _tick(stage_params, mask, state, feed, feed_valid):
+            return PL.pipeline_decode_tick(
+                cfg, stage_params, mask, state, feed, spec, mesh,
+                stage_axis=stage_axis, batch_axes=batch_axes, impl=impl,
+                feed_valid=feed_valid)
+
+        self._tick_fn = jax.jit(_tick)
+
+        def _reset(state: PL.PipelineDecodeState, slot) -> PL.PipelineDecodeState:
+            caches = jax.tree.map(
+                lambda full, fresh: full.at[:, :, slot].set(fresh),
+                state.caches, self._fresh_slot)
+            return PL.PipelineDecodeState(
+                caches=caches, buf=state.buf, buf_mb=state.buf_mb,
+                buf_valid=state.buf_valid,
+                tokens_out=state.tokens_out.at[slot].set(0),
+                token_ready=state.token_ready.at[slot].set(False),
+                tick=state.tick)
+
+        self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
+
+        self._tick = 0
+        self._prompts: Dict[int, np.ndarray] = {}       # slot -> [plen, lanes]
+        self._rounds: Dict[int, int] = {}               # feeds so far
+        self._gen_ready: Dict[int, int] = {}            # generated tokens seen
+        self._inflight: Dict[int, Tuple[int, int]] = {} # feed tick -> (slot, r)
+
+        cache_bytes = sum(l.nbytes for l in jax.tree.leaves(self.state.caches))
+        self._info = BackendInfo(
+            n_slots=m, max_len=max_len,
+            cache_bytes_per_slot=cache_bytes // m,
+            param_bytes=sum(l.nbytes
+                            for l in jax.tree.leaves(self.stage_params)),
+            samples_in_backend=True)
+
+    @property
+    def info(self) -> BackendInfo:
+        return self._info
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                ) -> List[SlotEvent]:
+        """Admit prompts; tokens stream through subsequent ticks, so the
+        first sampled token arrives from a later ``decode_step``."""
+        prompts = np.asarray(prompts, np.int32)
+        if prompts.ndim == 2:                       # [k, S] -> lanes dim
+            assert self.lanes == 1
+            prompts = prompts[:, :, None]
+        assert prompts.shape[0] == len(slots)
+        assert prompts.shape[2] == self.lanes
+        with self.mesh:
+            for i, slot in enumerate(slots):
+                self.state = self._reset_fn(self.state, jnp.asarray(slot))
+                self._prompts[slot] = prompts[i]
+                self._rounds[slot] = 0
+                self._gen_ready[slot] = 0
+        return []
+
+    def _feed_for(self, slot: int, feeds: Dict[int, int],
+                  ) -> Optional[np.ndarray]:
+        """Next input tokens [lanes] for this slot's turn, or None to idle."""
+        if slot not in self._prompts:
+            return None                             # no active request
+        r = self._rounds[slot]
+        prompt = self._prompts[slot]
+        if r < len(prompt):
+            return prompt[r]                        # teacher-forced prefill
+        # generation: consume the scheduler's sampled token exactly once
+        if (r - len(prompt)) < self._gen_ready[slot] and slot in feeds:
+            return np.full(self.lanes, feeds[slot], np.int32)
+        return None                                 # stalled (no fresh token)
+
+    def decode_step(self, feeds: Dict[int, int]) -> List[SlotEvent]:
+        slot = self._tick % self._m
+        feed = self._feed_for(slot, feeds)
+        valid = feed is not None
+        if valid:
+            self._inflight[self._tick] = (slot, self._rounds[slot])
+            self._rounds[slot] += 1
+        else:
+            feed = np.zeros(self.lanes, np.int32)
+        with self.mesh:
+            self.state = self._tick_fn(self.stage_params, self.mask,
+                                       self.state, jnp.asarray(feed),
+                                       feed_valid=jnp.asarray(valid))
+        events: List[SlotEvent] = []
+        done = self._inflight.pop(self._tick - (self.spec.n_stages - 1), None)
+        self._tick += 1
+        if done is None:
+            return events
+        dslot, r = done
+        if dslot in self._prompts and r >= len(self._prompts[dslot]) - 1:
+            tok = np.asarray(self.state.tokens_out[dslot])     # [lanes]
+            self._gen_ready[dslot] += 1
+            events.append(SlotEvent(
+                slot=dslot,
+                token=int(tok[0]) if self.lanes == 1 else tok))
+        return events
+
+    def free_slot(self, slot: int) -> None:
+        self._prompts.pop(slot, None)
+        self._rounds.pop(slot, None)
+        self._gen_ready.pop(slot, None)

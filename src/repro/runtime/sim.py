@@ -1,0 +1,113 @@
+"""SimBackend: the discrete-event cost model (``core/simulator.py``) behind
+the runtime backend protocol, so planner and benchmark code drive the exact
+interface the real backends serve.
+
+Each slot is a micro-batch of ``mb_batch`` sequences flowing through the
+planned stages.  ``decode_step`` advances every slot that has a fresh input
+token through the stage chain, respecting serially-reusable device resources
+(``dev_free``) exactly like :func:`repro.core.simulator.simulate_pipeline`:
+
+- the scheduler's continuous admission *is* the paper's No-bubbles schedule
+  (a micro-batch re-enters stage 0 as soon as its token returns),
+- ``schedule="bubbles"`` inserts the Fig. 5(a) iteration barrier inside the
+  backend, so the two schedules are compared over identical scheduler code.
+
+Tokens are synthetic (a seeded counter stream — planner code cares about
+time, not text); timing comes from :class:`repro.core.simulator.StageCosts`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Literal, Sequence
+
+import numpy as np
+
+from repro.core.simulator import SimResult, StageCosts
+from repro.runtime.base import BackendInfo, InferenceBackend, SlotEvent
+
+
+class SimBackend(InferenceBackend):
+    """Event-driven timing simulation of a planned stage deployment."""
+
+    def __init__(self, costs: StageCosts, n_slots: int, mb_batch: int = 1,
+                 schedule: Literal["nobubbles", "bubbles"] = "nobubbles",
+                 vocab_size: int = 32000, seed: int = 0):
+        self.costs = costs
+        self.mb_batch = mb_batch
+        self.schedule = schedule
+        self._n_slots = n_slots
+        self._dev_free = np.zeros(costs.n_stages)
+        self._ready = np.zeros(n_slots)         # per-slot re-entry time
+        self._active = [False] * n_slots
+        self._fed = [0] * n_slots               # feeds consumed per slot
+        self._seen = [0] * n_slots              # tokens emitted per slot
+        self._rng = np.random.default_rng(seed)
+        self._vocab = vocab_size
+        self.makespan = 0.0
+        self.tokens_done = 0
+        self._info = BackendInfo(n_slots=n_slots, max_len=1 << 30,
+                                 samples_in_backend=True)
+
+    @property
+    def info(self) -> BackendInfo:
+        return self._info
+
+    # ------------------------------------------------------------------ #
+    def _run_through_stages(self, slot: int, prefill: bool) -> float:
+        c = self.costs
+        t = self._ready[slot]
+        for s in range(c.n_stages):
+            start = max(t, self._dev_free[s])
+            finish = start + (c.prefill[s] if prefill else c.decode[s])
+            self._dev_free[s] = finish
+            t = finish
+            if s < c.n_stages - 1:
+                t += float(c.comm_prefill[s] if prefill else c.comm_decode[s])
+        t += c.return_comm                      # sampled ids back to source
+        self._ready[slot] = t
+        self.makespan = max(self.makespan, t)
+        return t
+
+    def _emit(self, slot: int) -> SlotEvent:
+        self._seen[slot] += 1
+        self.tokens_done += self.mb_batch
+        return SlotEvent(slot=slot,
+                         token=int(self._rng.integers(0, self._vocab)))
+
+    def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                ) -> List[SlotEvent]:
+        out = []
+        for slot in slots:
+            self._active[slot] = True
+            self._fed[slot] = 0
+            self._seen[slot] = 0
+            self._ready[slot] = self.makespan if self.schedule == "bubbles" \
+                else self._ready[slot]
+            self._run_through_stages(slot, prefill=True)
+            out.append(self._emit(slot))        # prefill emits the first token
+        return out
+
+    def decode_step(self, feeds: Dict[int, int]) -> List[SlotEvent]:
+        live = [s for s in sorted(feeds) if self._active[s]]
+        if not live:
+            return []
+        if self.schedule == "bubbles":          # Fig. 5(a) iteration barrier
+            barrier = max(self._ready[s] for s in live)
+            for s in live:
+                self._ready[s] = barrier
+        out = []
+        for slot in live:
+            self._fed[slot] += 1
+            self._run_through_stages(slot, prefill=False)
+            out.append(self._emit(slot))
+        return out
+
+    def free_slot(self, slot: int) -> None:
+        self._active[slot] = False
+
+    # ------------------------------------------------------------------ #
+    def sim_result(self) -> SimResult:
+        """Aggregate metrics in the simulator's units."""
+        tokens = self.tokens_done
+        ms = max(self.makespan, 1e-12)
+        return SimResult(self.makespan, tokens, ms / max(tokens, 1),
+                         tokens / ms)

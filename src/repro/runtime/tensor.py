@@ -1,0 +1,138 @@
+"""TensorBackend: the pjit tensor-parallel (or single-device) execution path
+behind the :class:`~repro.runtime.base.InferenceBackend` protocol.
+
+Extracted from ``serving/engine.py`` and made *slot-granular*: the engine's
+single batch-wide KV cache (one shared ``pos`` / ``key_pos`` for every
+sequence) is replaced by per-slot caches, so a new request can be admitted
+into a free slot mid-flight without re-prefilling — or corrupting — the
+requests already decoding.  Decode vmaps the single-sequence decode step over
+the slot axis, which gives every slot its own position counter for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.base import BackendInfo, InferenceBackend, SlotEvent
+from repro.sharding.rules import use_mesh
+
+PyTree = Any
+
+
+def _flat_with_axes(caches: PyTree, axes: PyTree):
+    """Zip cache leaves with their logical-axis tuples from cache_axes."""
+    leaves, treedef = jax.tree.flatten(caches)
+    ax_leaves, ax_treedef = jax.tree.flatten(
+        axes, is_leaf=lambda t: isinstance(t, tuple))
+    assert len(leaves) == len(ax_leaves), (treedef, ax_treedef)
+    return leaves, ax_leaves, treedef
+
+
+class TensorBackend(InferenceBackend):
+    """pjit prefill + vmapped decode with per-slot KV caches."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, n_slots: int,
+                 max_len: int, mesh=None, impl: str = "xla",
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+        self.impl = impl
+        self.cache_dtype = cache_dtype
+        self._axes = T.cache_axes(cfg)
+
+        # per-slot cache storage: every leaf of a single-sequence cache,
+        # stacked along a leading slot axis
+        one = T.init_caches(cfg, 1, max_len, cache_dtype)
+        self.caches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_slots,) + x.shape).copy(), one)
+
+        self._prefill_fn = jax.jit(functools.partial(
+            T.forward, cfg, mode="prefill", impl=impl))
+
+        def _decode(params, tokens, caches):
+            logits, new = jax.vmap(
+                lambda tok, c: T.decode_step(cfg, params, tok[None], c,
+                                             impl=impl),
+                in_axes=(0, 0))(tokens, caches)
+            return logits[:, 0], new
+
+        self._decode_fn = jax.jit(_decode)
+        self._scatter_fn = jax.jit(self._scatter, donate_argnums=(0,))
+
+        cache_bytes = sum(l.nbytes for l in jax.tree.leaves(self.caches))
+        self._info = BackendInfo(
+            n_slots=n_slots, max_len=max_len,
+            cache_bytes_per_slot=cache_bytes // n_slots,
+            param_bytes=sum(l.nbytes for l in jax.tree.leaves(params)),
+            samples_in_backend=False)
+
+    @property
+    def info(self) -> BackendInfo:
+        return self._info
+
+    # ------------------------------------------------------------------ #
+    def _scatter(self, storage: PyTree, new: PyTree, idx: jax.Array) -> PyTree:
+        """Write batch-k prefill caches into per-slot storage at ``idx``.
+
+        Prefill leaves carry one shared batch dim (where the logical axes
+        say "batch") or none at all (``key_pos`` / ``pos`` are batch-shared
+        in the engine layout); per-slot storage keeps a size-1 batch dim in
+        every leaf so the vmapped decode sees the [B=1] cache shape.
+        """
+        k = idx.shape[0]
+        s_leaves, ax_leaves, treedef = _flat_with_axes(storage, self._axes)
+        n_leaves, _, _ = _flat_with_axes(new, self._axes)
+        out = []
+        for leaf_s, leaf_n, ax in zip(s_leaves, n_leaves, ax_leaves):
+            if "batch" in ax:
+                b = ax.index("batch")
+                per = jnp.expand_dims(jnp.moveaxis(leaf_n, b, 0), axis=1 + b)
+            else:                           # replicate batch-shared leaves
+                per = jnp.broadcast_to(leaf_n, (k,) + leaf_n.shape)
+            out.append(leaf_s.at[idx].set(per.astype(leaf_s.dtype)))
+        return jax.tree.unflatten(treedef, out)
+
+    def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                ) -> List[SlotEvent]:
+        prompts = np.atleast_2d(np.asarray(prompts, np.int32))
+        k = prompts.shape[0]
+        assert len(slots) == k
+        # pad the wave to the full slot width by repeating the first entry
+        # (duplicate scatter indices write identical values), so prefill and
+        # scatter compile once instead of per admission-wave size
+        pad = self.n_slots - k
+        prompts_p = np.concatenate(
+            [prompts, np.repeat(prompts[:1], pad, axis=0)]) if pad else prompts
+        slots_p = list(slots) + [slots[0]] * pad
+        fresh = T.init_caches(self.cfg, self.n_slots, self.max_len,
+                              self.cache_dtype)
+        with use_mesh(self.mesh):
+            logits, new_caches, _ = self._prefill_fn(
+                self.params, jnp.asarray(prompts_p), caches=fresh)
+            self.caches = self._scatter_fn(self.caches, new_caches,
+                                           jnp.asarray(slots_p, jnp.int32))
+        last = np.asarray(logits[:, -1], np.float32)
+        return [SlotEvent(slot=s, logits=last[i]) for i, s in enumerate(slots)]
+
+    def decode_step(self, feeds: Dict[int, int]) -> List[SlotEvent]:
+        if not feeds:
+            return []
+        tokens = np.zeros(self.n_slots, np.int32)
+        for s, t in feeds.items():
+            tokens[s] = t
+        with use_mesh(self.mesh):
+            logits, self.caches = self._decode_fn(
+                self.params, jnp.asarray(tokens), self.caches)
+        logits = np.asarray(logits, np.float32)
+        return [SlotEvent(slot=s, logits=logits[s]) for s in sorted(feeds)]
+
+    def free_slot(self, slot: int) -> None:
+        pass        # storage is fully overwritten on the next prefill

@@ -1,2 +1,3 @@
-from repro.serving.engine import Request, SamplingParams, ServeEngine, sample_logits
+from repro.serving.engine import (Request, SamplingParams, ServeEngine,
+                                  sample_logits)
 from repro.serving.scheduler import ContinuousBatcher, SchedulerStats

@@ -1,10 +1,11 @@
-"""Serving engine: prefill + decode with batching and sampling.
+"""Serving engine: batch-lockstep prefill + decode with sampling.
 
-Two execution modes sharing the sampling/stopping logic:
-
-- ``tensor``   — pjit tensor-parallel (or single-device) prefill + decode,
-- ``pipeline`` — EdgeShard stage-pipeline decode via the no-bubbles tick
-  protocol (``core/pipeline.py``), the paper's deployment mode.
+``ServeEngine`` is the simple whole-batch generation path (one shared KV
+cache, one sampling params for the batch).  Production serving routes
+through ``repro.runtime`` instead: ``runtime.TensorBackend`` is this
+engine's execution path made slot-granular behind the backend protocol, and
+``serving.ContinuousBatcher`` schedules requests over any backend —
+including the EdgeShard stage pipeline (``runtime.PipelineBackend``).
 """
 from __future__ import annotations
 

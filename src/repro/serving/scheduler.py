@@ -1,22 +1,33 @@
-"""Request scheduler: continuous batching + the no-bubbles admission rule.
+"""Request scheduler: continuous batching over any runtime backend.
 
 The paper's EdgeShard-No-bubbles schedule admits a micro-batch's next
 iteration as soon as its token returns, instead of waiting for the iteration
 barrier.  At the serving layer this is continuous batching: a slot is
 recycled the moment its request finishes, and new requests join without
 draining the batch.
+
+The batcher is backend-agnostic (``repro.runtime.InferenceBackend``): it
+owns request queues, per-request sampling state (PRNG keys + params), slot
+assignment and recycling, and admission; the backend owns weights, KV
+caches, and the execution schedule.  Driving the no-bubbles pipeline, the
+batcher's continuous admission *is* the paper's schedule — each quantum is
+one tick and a finished micro-batch slot is refilled while the other stages
+keep streaming.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import Request, SamplingParams, ServeEngine, sample_logits
+from repro.runtime.base import InferenceBackend, SlotEvent
+from repro.serving.engine import (Request, SamplingParams, ServeEngine,
+                                  sample_logits)
 
 
 @dataclass
@@ -31,69 +42,118 @@ class SchedulerStats:
     def utilization(self) -> float:
         return self.slot_busy_steps / max(self.slot_total_steps, 1)
 
+    def __repr__(self):
+        return (f"SchedulerStats(served={self.served}, "
+                f"decode_steps={self.decode_steps}, "
+                f"prefills={self.prefills}, "
+                f"utilization={self.utilization:.3f})")
+
+
+def _as_backend(engine_or_backend) -> InferenceBackend:
+    if isinstance(engine_or_backend, InferenceBackend):
+        return engine_or_backend
+    if isinstance(engine_or_backend, ServeEngine):
+        from repro.runtime.tensor import TensorBackend
+        eng = engine_or_backend
+        return TensorBackend(eng.cfg, eng.params, n_slots=eng.max_batch,
+                             max_len=eng.max_len, mesh=eng.mesh,
+                             impl=eng.impl, cache_dtype=eng.cache_dtype)
+    raise TypeError(f"not a backend: {type(engine_or_backend)!r}")
+
 
 class ContinuousBatcher:
-    """Fixed-slot continuous batching over one ServeEngine.
+    """Fixed-slot continuous batching over one :class:`InferenceBackend`.
 
-    Prompts are padded to a common prefill length per admission wave; decode
-    runs with one shared KV cache whose batch dim is the slot array.
+    Prompts are padded to a common ``prompt_len`` by the caller.  Requests
+    may arrive over time (``submit(req, at_step=...)``); a slot is recycled
+    the moment its request finishes and the next queued request is admitted
+    without draining the others.
     """
 
-    def __init__(self, engine: ServeEngine, prompt_len: int, seed: int = 0):
-        self.engine = engine
+    def __init__(self, backend, prompt_len: int, seed: int = 0):
+        self.backend: InferenceBackend = _as_backend(backend)
         self.prompt_len = prompt_len
         self.queue: Deque[Request] = deque()
+        self._arrivals: List[Tuple[int, int, Request]] = []   # (step, n, req)
+        self._n_submitted = 0
         self.done: Dict[int, Request] = {}
-        self.key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._keys: Dict[int, jax.Array] = {}
         self.stats = SchedulerStats()
 
-    def submit(self, req: Request):
+    def submit(self, req: Request, at_step: int = 0):
         assert len(req.prompt) == self.prompt_len, "pad prompts to prompt_len"
-        self.queue.append(req)
+        if req.params.temperature > 0.0 and \
+                self.backend.info.samples_in_backend:
+            raise ValueError(
+                f"request {req.uid}: backend samples in-SPMD (greedy); "
+                f"temperature/top_k sampling needs a logits-producing "
+                f"backend (e.g. TensorBackend)")
+        self._n_submitted += 1
+        if at_step <= 0:
+            self.queue.append(req)
+        else:
+            heapq.heappush(self._arrivals,
+                           (at_step, self._n_submitted, req))
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        """Serve until the queue drains. Returns finished requests by uid."""
-        eng = self.engine
-        b = eng.max_batch
-        slots: List[Optional[Request]] = [None] * b
-        caches = None
-        cur_tok = np.zeros(b, np.int32)
-        steps = 0
-        while (self.queue or any(s is not None for s in slots)) \
-                and steps < max_steps:
-            # admission wave: fill empty slots, re-prefill batch-wide
-            if self.queue and any(s is None for s in slots):
-                for i in range(b):
-                    if slots[i] is None and self.queue:
-                        slots[i] = self.queue.popleft()
-                prompts = np.stack([
-                    s.prompt if s is not None
-                    else np.zeros(self.prompt_len, np.int32)
-                    for s in slots])
-                logits, caches = eng.prefill(jnp.asarray(prompts))
-                self.stats.prefills += 1
-                self.key, sub = jax.random.split(self.key)
-                sp = next(s.params for s in slots if s is not None)
-                cur_tok = np.asarray(sample_logits(sub, logits, sp))
-                for i, s in enumerate(slots):
-                    if s is not None and not s.done:
-                        s.generated.append(int(cur_tok[i]))
-            # one decode step for every active slot
-            logits, caches = eng.decode(jnp.asarray(cur_tok), caches)
-            self.stats.decode_steps += 1
-            self.key, sub = jax.random.split(self.key)
-            sp = next((s.params for s in slots if s is not None),
-                      SamplingParams())
-            cur_tok = np.asarray(sample_logits(sub, logits, sp))
-            self.stats.slot_total_steps += b
-            for i, s in enumerate(slots):
-                if s is None:
+    # ------------------------------------------------------------------ #
+    def _sample(self, req: Request, ev: SlotEvent) -> int:
+        if ev.logits is None:
+            return int(ev.token)        # backend sampled in-SPMD (greedy)
+        if req.params.temperature <= 0.0:
+            return int(np.argmax(ev.logits))
+        key = self._keys.setdefault(
+            req.uid, jax.random.fold_in(self._base_key, req.uid))
+        self._keys[req.uid], sub = jax.random.split(key)
+        return int(sample_logits(sub, jnp.asarray(ev.logits)[None],
+                                 req.params)[0])
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, Request]:
+        """Serve until queues drain. Returns finished requests by uid."""
+        n_slots = self.backend.n_slots
+        slot_req: Dict[int, Request] = {}
+        free: Deque[int] = deque(range(n_slots))
+        feeds: Dict[int, int] = {}
+        step = 0
+
+        def handle(events: List[SlotEvent]):
+            for ev in events:
+                req = slot_req.get(ev.slot)
+                if req is None:
                     continue
-                self.stats.slot_busy_steps += 1
-                s.generated.append(int(cur_tok[i]))
-                if s.done:
-                    self.done[s.uid] = s
+                tok = self._sample(req, ev)
+                req.generated.append(tok)
+                if req.done:
+                    self.done[req.uid] = req
                     self.stats.served += 1
-                    slots[i] = None     # continuous: recycle immediately
-            steps += 1
+                    self._keys.pop(req.uid, None)
+                    self.backend.free_slot(ev.slot)
+                    del slot_req[ev.slot]
+                    feeds.pop(ev.slot, None)
+                    free.append(ev.slot)        # continuous: recycle now
+                else:
+                    feeds[ev.slot] = tok
+
+        while step < max_steps:
+            while self._arrivals and self._arrivals[0][0] <= step:
+                self.queue.append(heapq.heappop(self._arrivals)[2])
+            if not (self.queue or slot_req or self._arrivals):
+                break
+            # admission: fill free slots without draining the running batch
+            if self.queue and free:
+                slots, prompts = [], []
+                while self.queue and free:
+                    slot = free.popleft()
+                    req = self.queue.popleft()
+                    slot_req[slot] = req
+                    slots.append(slot)
+                    prompts.append(np.asarray(req.prompt, np.int32))
+                self.stats.prefills += 1
+                handle(self.backend.prefill(slots, np.stack(prompts)))
+            if slot_req:
+                self.stats.decode_steps += 1
+                self.stats.slot_total_steps += n_slots
+                self.stats.slot_busy_steps += len(slot_req)
+                handle(self.backend.decode_step(feeds))
+            step += 1
         return self.done

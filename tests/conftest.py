@@ -1,0 +1,8 @@
+"""Make ``import repro`` work under plain ``pytest -x -q`` (no PYTHONPATH)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

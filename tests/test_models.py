@@ -167,6 +167,7 @@ def test_kvint8_decode_matches_bf16(arch):
 def test_kv_quantizer_roundtrip_property():
     """Property: per-(token, head) absmax int8 quantization keeps relative
     error <= 1/127 per head vector (absmax scaling bound) for any input."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.models.attention import _dequantize_kv, _quantize_kv
 

@@ -1,6 +1,8 @@
 """DP partition algorithms vs. exact brute-force references + properties."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import (INF, PartitionProblem, brute_force_latency,

@@ -195,6 +195,7 @@ def test_spec_from_plan_property():
     """Any DP plan (arbitrary contiguous stage sizes) maps to a valid
     PipelineSpec: all periods covered, n_stages respected."""
     import numpy as np
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.configs import get_config
     from repro.core.partition import Plan

@@ -1,6 +1,8 @@
 """Pipeline simulator invariants + paper-claimed qualitative behaviours."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.simulator import (StageCosts, simulate_pipeline,
