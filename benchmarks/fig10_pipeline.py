@@ -1,7 +1,7 @@
 """Fig. 10 reproduction: EdgeShard-No-bubbles vs EdgeShard-Bubbles pipeline
 execution for Llama2-7B/13B (1 Mbps cloud bandwidth).
 
-Both schedules run through the serving stack itself — ``ContinuousBatcher``
+Both schedules run through the serving stack itself — the ``LLM`` facade
 over a ``SimBackend`` materialized from the DP plan with
 ``runtime.from_deployment`` — so the scheduling comparison exercises the
 identical request path the real backends serve.  The batcher's continuous
@@ -22,7 +22,7 @@ from repro.core.devices import MBPS, paper_testbed
 from repro.core.planner import plan_deployment
 from repro.core.profile import Workload
 from repro.runtime import from_deployment
-from repro.serving import ContinuousBatcher, Request, SamplingParams
+from repro.serving import LLM, SamplingParams
 
 N_MICROBATCHES = 8
 
@@ -36,18 +36,13 @@ def run(verbose: bool = True) -> Dict[str, Dict[str, float]]:
         dep = plan_deployment(cfg, cluster, workload, objective="throughput")
         res = {}
         for schedule in ("bubbles", "nobubbles"):
-            backend = from_deployment(dep, cluster, cfg, kind="sim",
-                                      workload=workload,
-                                      n_slots=N_MICROBATCHES,
-                                      schedule=schedule)
-            batcher = ContinuousBatcher(backend, prompt_len=workload.prompt_len)
+            llm = LLM.from_backend(from_deployment(
+                dep, cluster, cfg, kind="sim", workload=workload,
+                n_slots=N_MICROBATCHES, schedule=schedule))
             prompt = np.zeros(workload.prompt_len, np.int32)
-            for uid in range(N_MICROBATCHES):
-                batcher.submit(Request(uid, prompt,
-                                       SamplingParams(
-                                           max_tokens=workload.gen_tokens)))
-            batcher.run()
-            sim = backend.sim_result()
+            llm.generate([prompt] * N_MICROBATCHES,
+                         SamplingParams(max_tokens=workload.gen_tokens))
+            sim = llm.backend.sim_result()
             res[schedule] = sim.throughput
             if verbose:
                 print(f"fig10,{name},{schedule},{sim.throughput:.2f},"

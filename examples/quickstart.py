@@ -1,15 +1,18 @@
-"""Quickstart: plan an EdgeShard deployment and inspect it.
+"""Quickstart: plan an EdgeShard deployment, inspect it, and serve it.
 
 Runs the paper's pipeline end-to-end on the decision layer: profile
 Llama2-7B, solve the joint device-selection + partition DPs on the paper's
-15-device testbed, and simulate latency/throughput for every method of
-Table IV.
+15-device testbed, simulate latency/throughput for every method of
+Table IV — then serve requests over the planned deployment through the
+``LLM`` facade (here on the simulated backend, so it runs instantly with no
+model weights; swap ``kind="pipeline", params=...`` for the real thing).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs import PAPER_MODELS
 from repro.core import Workload, baseline_suite, paper_testbed
 from repro.core.devices import MBPS
+from repro.serving import LLM, SamplingParams
 
 
 def main():
@@ -36,6 +39,19 @@ def main():
         dev = cluster.devices[st.device]
         print(f"  units {st.start:3d}..{st.end:3d} -> device {st.device:2d} "
               f"({dev.name})")
+
+    # --- serve the planned deployment (plan -> backend -> requests in one
+    #     call; variable-length prompts, no padding by the caller) ---------
+    llm = LLM.from_plan(cfg, cluster, workload, objective="throughput",
+                        kind="sim")
+    outs = llm.generate([list(range(24)), list(range(9)), list(range(40))],
+                        SamplingParams(max_tokens=workload.gen_tokens))
+    print("\nserved over the planned deployment (simulated):")
+    for o in outs:
+        print(f"  req {o.uid}: {o.n_prompt:2d} prompt -> {o.n_generated} "
+              f"tokens ({o.finish_reason})")
+    sim = llm.backend.sim_result()
+    print(f"  simulated throughput {sim.throughput:.1f} tok/s — {llm.stats}")
 
 
 if __name__ == "__main__":

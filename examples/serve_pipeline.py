@@ -1,15 +1,18 @@
-"""End-to-end driver: serve batched requests through the unified runtime on
-the EdgeShard shard_map pipeline (no-bubbles decode over 8 XLA devices).
+"""End-to-end driver: serve variable-length requests through the ``LLM``
+facade on the EdgeShard shard_map pipeline (no-bubbles decode over 8 XLA
+devices).
 
 This is the paper's deployment mode on the TPU-native runtime:
-1. plan an (uneven) stage partition with the throughput DP,
-2. ``runtime.from_deployment`` turns the plan into a running
-   ``PipelineBackend`` (params restacked into per-stage slabs),
-3. ``ContinuousBatcher`` streams requests through the no-bubbles tick
-   protocol — more requests than micro-batch slots, so slots are recycled
-   mid-flight,
-4. cross-check every generated token against the TensorBackend (single
-   engine) serving the identical requests.
+1. ``LLM.from_plan`` plans an (uneven) stage partition with the throughput
+   DP and materializes it as a running ``PipelineBackend`` (params restacked
+   into per-stage slabs) behind one serving facade,
+2. ``generate()`` streams requests of *different prompt lengths* through the
+   no-bubbles tick protocol — more requests than micro-batch slots, so slots
+   are recycled mid-flight, and admission buckets prompts by length (no
+   caller-side padding),
+3. cross-check every generated token against the TensorBackend (single
+   engine) serving the identical requests,
+4. demo the streaming interface on the tensor engine.
 
 Must run in its own process (needs 8 host devices):
     PYTHONPATH=src python examples/serve_pipeline.py
@@ -25,23 +28,9 @@ import numpy as np
 from repro import runtime
 from repro.configs import get_config
 from repro.core.devices import tpu_pod_cluster
-from repro.core.planner import plan_deployment
 from repro.core.profile import Workload
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request, SamplingParams
-
-
-def serve(backend, prompts, gen, seed=0):
-    batcher = ContinuousBatcher(backend, prompt_len=prompts.shape[1],
-                                seed=seed)
-    for uid in range(len(prompts)):
-        batcher.submit(Request(uid, prompts[uid],
-                               SamplingParams(max_tokens=gen)))
-    t0 = time.time()
-    done = batcher.run()
-    dt = time.time() - t0
-    toks = np.stack([done[u].generated for u in range(len(prompts))])
-    return toks, dt, batcher.stats
+from repro.serving import LLM, SamplingParams
 
 
 def main():
@@ -49,33 +38,46 @@ def main():
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
     n_stages = 4
 
-    # 1. plan the partition with the paper's throughput DP over a 4-chip
-    #    homogeneous "cluster" profile
-    cluster = tpu_pod_cluster(n_chips=n_stages)
-    dep = plan_deployment(cfg, cluster, Workload(dtype_bytes=2),
-                          objective="throughput")
-
-    # 2. plan -> running backend in one call
-    mesh = jax.make_mesh((1, n_stages), ("data", "model"))
-    backend = runtime.from_deployment(dep, cluster, cfg, kind="pipeline",
-                                      params=params, mesh=mesh, max_len=64)
+    # 1. plan (paper's throughput DP over a 4-chip homogeneous "cluster"
+    #    profile) -> running pipeline backend -> serving facade, one call
+    llm = LLM.from_plan(cfg, tpu_pod_cluster(n_chips=n_stages),
+                        Workload(dtype_bytes=2), objective="throughput",
+                        kind="pipeline", params=params, max_len=64)
     print(f"stage layout (periods per stage): "
-          f"{backend.spec.periods_per_stage}")
+          f"{llm.backend.spec.periods_per_stage}")
 
-    # 3. continuous batching: 8 requests over 4 micro-batch slots
-    n_req, plen, gen = 8, 4, 8
+    # 2. continuous batching: 8 variable-length requests over 4 micro-batch
+    #    slots (admission buckets by length; nobody pads)
+    n_req, gen = 8, 8
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (n_req, plen)).astype(np.int32)
-    toks, dt, stats = serve(backend, prompts, gen)
-    total = toks.size
-    print(f"pipeline: {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s on CPU-interpreted SPMD) — {stats}")
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in rng.integers(3, 7, n_req)]
+    sp = SamplingParams(max_tokens=gen)
+    t0 = time.time()
+    outs = llm.generate(prompts, sp)
+    dt = time.time() - t0
+    total = sum(o.n_generated for o in outs)
+    print(f"pipeline: {total} tokens for prompt lengths "
+          f"{[o.n_prompt for o in outs]} in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on CPU-interpreted SPMD) — {llm.stats}")
 
-    # 4. verify against the tensor backend serving the same requests
-    ref_backend = runtime.TensorBackend(cfg, params, n_slots=4, max_len=64)
-    ref, _, _ = serve(ref_backend, prompts, gen)
-    np.testing.assert_array_equal(toks, ref)
+    # 3. verify against the tensor backend serving the same requests
+    ref_llm = LLM.from_backend(
+        runtime.TensorBackend(cfg, params, n_slots=4, max_len=64))
+    refs = ref_llm.generate(prompts, sp)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o.tokens, r.tokens)
     print("all pipeline tokens match the tensor backend — OK")
+
+    # 4. streaming: tokens surface the step they decode, interleaved across
+    #    requests
+    stream_llm = LLM.from_backend(
+        runtime.TensorBackend(cfg, params, n_slots=2, max_len=64))
+    events = list(stream_llm.stream(prompts[:2], SamplingParams(max_tokens=4)))
+    for ev in events:
+        print(f"  step {ev.step} req {ev.uid} tok[{ev.index}]={ev.token}"
+              + (f" <{ev.finish_reason}>" if ev.finished else ""))
+    assert sum(ev.finished for ev in events) == 2
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """Pipeline-mode dry-run: lower + compile the EdgeShard pipeline runtime
 (``core/pipeline.py`` — the paper's technique mapped onto the mesh) on the
 production mesh, producing the same cost/collective record as the TP
 baseline dry-run so the two distribution modes are directly comparable in
 EXPERIMENTS.md §Perf.
+
+The ``--layout dp`` stage layout routes through the same
+``runtime.plan_pipeline_spec`` planner→spec path the serving facade
+(``serving.LLM.from_plan``) builds on, so dry-run numbers describe the
+layouts production serving actually runs.
 
 The ``model`` axis carries the pipeline *stages* (16 stages single-pod);
 ``data`` (x ``pod``) carries the batch.  Decode shapes lower
@@ -17,6 +19,9 @@ Usage:
         --arch starcoder2-7b --shape decode_32k [--microbatches 16] \
         [--layout even|dp] [--tag-suffix +pipeline]
 """
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
 import argparse
 import functools
 import json

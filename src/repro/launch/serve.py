@@ -1,18 +1,18 @@
-"""Serving launcher: batched generation through the unified runtime.
+"""Serving launcher: request-lifecycle generation through the ``LLM`` facade.
 
-Both modes route through ``ContinuousBatcher`` over an
-``repro.runtime.InferenceBackend`` — the launcher owns no generation loop:
+Both modes route through ``serving.LLM`` (continuous batching over an
+``repro.runtime.InferenceBackend``) — the launcher owns no generation loop
+and never pads a prompt:
 
 - ``--mode tp``        TensorBackend (pjit tensor-parallel / single device),
-- ``--mode pipeline``  PipelineBackend: the paper's deployment mode — the
-  throughput DP plans (possibly uneven) stages over a cluster profile and
-  ``runtime.from_deployment`` materializes the plan as a running no-bubbles
-  stage pipeline.
+- ``--mode pipeline``  the paper's deployment mode — ``LLM.from_plan`` runs
+  the throughput DP over a cluster profile and materializes the (possibly
+  uneven) stage plan as a running no-bubbles pipeline in one call.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --mode tp --batch 4 --gen 16 [--kvint8]
+        --mode tp --batch 4 --gen 16 [--kvint8] [--stream] [--varlen]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --mode pipeline --devices 8 --stages 4
+        --mode pipeline --stages 4            # devices default to --stages
 """
 import argparse
 import os
@@ -30,16 +30,29 @@ def main():
                     help="backend slots (default: batch for tp, "
                          "stages for pipeline)")
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--varlen", action="store_true",
+                    help="vary prompt lengths in [prompt_len/2, prompt_len] "
+                         "(bucketed admission serves them in one batch)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--kvint8", action="store_true",
                     help="int8 KV cache (EXPERIMENTS.md §Perf-A3)")
-    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake XLA host devices (pipeline mode defaults "
+                         "to --stages)")
     ap.add_argument("--stages", type=int, default=4,
                     help="pipeline stages (pipeline mode)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they decode (streaming API)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.mode == "pipeline" and not args.devices:
+        args.devices = args.stages      # one fake XLA device per stage
+    if args.mode == "pipeline" and args.devices < args.stages:
+        ap.error(f"--mode pipeline plans {args.stages} stages and needs one "
+                 f"XLA device per stage: pass --devices >= {args.stages}, "
+                 f"lower --stages, or drop --devices to default it")
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
@@ -51,7 +64,7 @@ def main():
     from repro import runtime
     from repro.configs import get_config
     from repro.models import transformer as T
-    from repro.serving import ContinuousBatcher, Request, SamplingParams
+    from repro.serving import LLM, SamplingParams
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -60,54 +73,62 @@ def main():
         cfg = dataclasses.replace(cfg, kv_dtype="int8")
     params, _ = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
+    lens = [args.prompt_len] * args.batch
+    if args.varlen:
+        lens = [int(x) for x in rng.integers(
+            max(args.prompt_len // 2, 1), args.prompt_len + 1, args.batch)]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
 
     if args.mode == "tp":
         mesh = None
         if args.devices:
             mesh = jax.make_mesh((1, args.devices), ("data", "model"))
-        backend = runtime.TensorBackend(
+        llm = LLM.from_backend(runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
-            max_len=args.max_len, mesh=mesh)
+            max_len=args.max_len, mesh=mesh), seed=args.seed)
     else:
-        # planner -> backend: the DP chooses the (possibly uneven) stage
-        # layout over a homogeneous cluster profile of --stages chips
+        # planner -> backend -> serving in one call: the DP chooses the
+        # (possibly uneven) stage layout over a homogeneous cluster profile
+        # of --stages chips; request-granular slots use lanes=1, so the
+        # mesh carries stages only (data-parallel lanes are a ROADMAP item)
         from repro.core.devices import tpu_pod_cluster
-        from repro.core.planner import plan_deployment
         from repro.core.profile import Workload
-        assert args.devices >= args.stages, \
-            f"--mode pipeline needs --devices >= --stages ({args.stages})"
-        cluster = tpu_pod_cluster(n_chips=args.stages)
-        dep = plan_deployment(cfg, cluster,
-                              Workload(prompt_len=args.prompt_len,
-                                       gen_tokens=args.gen, dtype_bytes=2),
-                              objective="throughput")
-        # request-granular slots need lanes=1, so the mesh carries stages
-        # only; data-parallel lanes over spare devices are a ROADMAP item
-        n_stages = len(dep.plan.stages)
+        llm = LLM.from_plan(
+            cfg, tpu_pod_cluster(n_chips=args.stages),
+            Workload(prompt_len=args.prompt_len, gen_tokens=args.gen,
+                     dtype_bytes=2),
+            objective="throughput", kind="pipeline", params=params,
+            n_slots=args.slots or None, max_len=args.max_len, seed=args.seed)
+        n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "
                   f"(stage axis only; no data-parallel lanes yet)")
-        mesh = jax.make_mesh((1, n_stages), ("data", "model"))
-        backend = runtime.from_deployment(
-            dep, cluster, cfg, kind="pipeline", params=params, mesh=mesh,
-            n_slots=args.slots or None, max_len=args.max_len)
         print(f"planned stages (periods per stage): "
-              f"{backend.spec.periods_per_stage}")
+              f"{llm.backend.spec.periods_per_stage}")
 
-    batcher = ContinuousBatcher(backend, prompt_len=args.prompt_len,
-                                seed=args.seed)
     sp = SamplingParams(max_tokens=args.gen)
-    for uid in range(args.batch):
-        batcher.submit(Request(uid, prompts[uid], sp))
     t0 = time.time()
-    done = batcher.run()
+    if args.stream:
+        outs = {}
+        for ev in llm.stream(prompts, sp):
+            print(f"  step {ev.step:4d} req {ev.uid} tok[{ev.index}]="
+                  f"{ev.token}" + (f" <{ev.finish_reason}>"
+                                   if ev.finished else ""))
+            if ev.finished:
+                outs[ev.uid] = llm.poll(ev.uid)
+        outs = list(outs.values())
+    else:
+        outs = llm.generate(prompts, sp)
     dt = time.time() - t0
-    out = np.stack([done[u].generated for u in range(args.batch)])
-    print(f"served {len(done)} requests, {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s) — {batcher.stats}")
-    print(out[:, :10])
+    total = sum(o.n_generated for o in outs)
+    print(f"served {len(outs)} requests ({[o.n_prompt for o in outs]} prompt "
+          f"tokens), {total} generated in {dt:.2f}s ({total / dt:.1f} tok/s) "
+          f"— {llm.stats}")
+    for o in outs[:4]:
+        ttft = f"{o.timing.ttft_s:.2f}s" if o.timing.ttft_s else "-"
+        print(f"  req {o.uid}: {o.finish_reason} after {o.n_generated} toks "
+              f"(ttft {ttft}) {o.tokens[:10]}")
 
 
 if __name__ == "__main__":

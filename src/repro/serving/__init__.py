@@ -1,3 +1,20 @@
-from repro.serving.engine import (Request, SamplingParams, ServeEngine,
-                                  sample_logits)
-from repro.serving.scheduler import ContinuousBatcher, SchedulerStats
+from repro.serving.llm import LLM
+from repro.serving.scheduler import (ContinuousBatcher, IncompleteServeError,
+                                     SchedulerStats)
+from repro.serving.types import (Request, RequestOutput, RequestTiming,
+                                 SamplingParams, TokenEvent)
+
+__all__ = [
+    "LLM", "Request", "RequestOutput", "RequestTiming", "SamplingParams",
+    "TokenEvent", "ContinuousBatcher", "SchedulerStats",
+    "IncompleteServeError", "ServeEngine", "sample_logits",
+]
+
+
+def __getattr__(name):
+    # the jax-heavy engine imports lazily so planner/benchmark code can use
+    # the facade over SimBackend without touching jax (mirrors repro.runtime)
+    if name in ("ServeEngine", "sample_logits"):
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

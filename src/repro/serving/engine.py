@@ -2,17 +2,20 @@
 
 ``ServeEngine`` is the simple whole-batch generation path (one shared KV
 cache, one sampling params for the batch).  Production serving routes
-through ``repro.runtime`` instead: ``runtime.TensorBackend`` is this
-engine's execution path made slot-granular behind the backend protocol, and
-``serving.ContinuousBatcher`` schedules requests over any backend —
-including the EdgeShard stage pipeline (``runtime.PipelineBackend``).
+through ``serving.LLM`` over ``repro.runtime`` instead:
+``runtime.TensorBackend`` is this engine's execution path made slot-granular
+behind the backend protocol, and ``serving.ContinuousBatcher`` schedules
+requests over any backend — including the EdgeShard stage pipeline
+(``runtime.PipelineBackend``).
+
+Request/SamplingParams live in ``serving.types`` (jax-free, importable by
+scheduler and server code without this module's model dependencies); they
+are re-exported here for backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,33 +23,10 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.types import Request, SamplingParams   # noqa: F401 (re-export)
 from repro.sharding.rules import use_mesh
 
 PyTree = Any
-
-
-@dataclass
-class SamplingParams:
-    temperature: float = 0.0          # 0 = greedy
-    top_k: int = 0                    # 0 = no top-k filtering
-    max_tokens: int = 64
-    eos_id: Optional[int] = None
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                # [S] int32
-    params: SamplingParams = field(default_factory=SamplingParams)
-    generated: List[int] = field(default_factory=list)
-
-    @property
-    def done(self) -> bool:
-        if len(self.generated) >= self.params.max_tokens:
-            return True
-        eos = self.params.eos_id
-        return eos is not None and len(self.generated) > 0 \
-            and self.generated[-1] == eos
 
 
 def sample_logits(key: jax.Array, logits: jax.Array,

@@ -13,21 +13,36 @@ caches, and the execution schedule.  Driving the no-bubbles pipeline, the
 batcher's continuous admission *is* the paper's schedule — each quantum is
 one tick and a finished micro-batch slot is refilled while the other stages
 keep streaming.
+
+The scheduler is *reentrant*: :meth:`ContinuousBatcher.step` advances one
+quantum and returns the :class:`~repro.serving.types.TokenEvent` s it
+produced, so servers can interleave ``submit()`` with stepping —
+:meth:`run` is just ``step()`` in a loop.  Prompts keep their natural
+length: admission groups queued requests into *length buckets* (next power
+of two, floored at ``min_bucket`` and capped at the backend's ``max_len``)
+and left-pads each wave to its bucket, so the backend sees a bounded set of
+XLA prefill shapes and the last prompt position always holds the last real
+token.
+
+Padding semantics: pad tokens are fed to the model unmasked (the runtime's
+prefill has no attention-mask input yet), so a request's output is a
+deterministic function of (prompt, bucket size) — identical across
+backends, submission orders, and batch compositions, but not identical to
+the unpadded continuation unless the prompt exactly fills its bucket.
+Masked prefill to make bucketing semantically neutral is a ROADMAP item.
 """
 from __future__ import annotations
 
 import heapq
+import time
 from collections import deque
-from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.base import InferenceBackend, SlotEvent
-from repro.serving.engine import (Request, SamplingParams, ServeEngine,
-                                  sample_logits)
+from repro.serving.types import Request, TokenEvent
 
 
 @dataclass
@@ -37,6 +52,9 @@ class SchedulerStats:
     prefills: int = 0
     slot_busy_steps: int = 0
     slot_total_steps: int = 0
+    exhausted: bool = False             # run() hit max_steps with work left
+    prefill_shapes: Dict[int, int] = field(default_factory=dict)
+    # ^ bucketed prompt length -> number of admission waves at that shape
 
     @property
     def utilization(self) -> float:
@@ -49,9 +67,24 @@ class SchedulerStats:
                 f"utilization={self.utilization:.3f})")
 
 
+class IncompleteServeError(RuntimeError):
+    """``run()`` exhausted ``max_steps`` with requests still queued/running.
+
+    ``done`` carries the requests that *did* finish, so callers can salvage
+    partial results instead of silently mistaking them for the full set.
+    """
+
+    def __init__(self, msg: str, done: Dict[int, Request]):
+        super().__init__(msg)
+        self.done = done
+
+
 def _as_backend(engine_or_backend) -> InferenceBackend:
     if isinstance(engine_or_backend, InferenceBackend):
         return engine_or_backend
+    # jax-heavy ServeEngine imports lazily: the scheduler itself (and the
+    # SimBackend benchmark path through it) must stay importable without jax
+    from repro.serving.engine import ServeEngine
     if isinstance(engine_or_backend, ServeEngine):
         from repro.runtime.tensor import TensorBackend
         eng = engine_or_backend
@@ -64,96 +97,251 @@ def _as_backend(engine_or_backend) -> InferenceBackend:
 class ContinuousBatcher:
     """Fixed-slot continuous batching over one :class:`InferenceBackend`.
 
-    Prompts are padded to a common ``prompt_len`` by the caller.  Requests
-    may arrive over time (``submit(req, at_step=...)``); a slot is recycled
-    the moment its request finishes and the next queued request is admitted
-    without draining the others.
+    Requests carry prompts of any length; admission pads them per length
+    bucket (see module docstring), so callers never pad.  Requests may
+    arrive any time — ``submit()`` between ``step()`` calls, or pre-staged
+    with ``submit(req, at_step=...)`` — and a slot is recycled the moment
+    its request finishes, without draining the others.
+
+    ``on_token`` (or the events returned by ``step()``) streams tokens as
+    slots decode them.
     """
 
-    def __init__(self, backend, prompt_len: int, seed: int = 0):
+    def __init__(self, backend, seed: int = 0, *, min_bucket: int = 8,
+                 pad_id: int = 0,
+                 on_token: Optional[Callable[[TokenEvent], None]] = None):
         self.backend: InferenceBackend = _as_backend(backend)
-        self.prompt_len = prompt_len
+        self.min_bucket = min_bucket
+        self.pad_id = pad_id
+        self.on_token = on_token
         self.queue: Deque[Request] = deque()
         self._arrivals: List[Tuple[int, int, Request]] = []   # (step, n, req)
         self._n_submitted = 0
         self.done: Dict[int, Request] = {}
-        self._base_key = jax.random.PRNGKey(seed)
-        self._keys: Dict[int, jax.Array] = {}
+        self._seed = seed
+        self._base_key = None               # lazy: jax only if sampling
+        self._keys: Dict[int, object] = {}
         self.stats = SchedulerStats()
+        # stepping state (was local to run() before the API redesign)
+        self._slot_req: Dict[int, Request] = {}
+        self._free: Deque[int] = deque(range(self.backend.n_slots))
+        self._feeds: Dict[int, int] = {}
+        self.step_no = 0
+        self._uids: Set[int] = set()
 
-    def submit(self, req: Request, at_step: int = 0):
-        assert len(req.prompt) == self.prompt_len, "pad prompts to prompt_len"
+    # ------------------------------------------------------------------ #
+    # submission
+    # ------------------------------------------------------------------ #
+    def _bucket(self, n: int) -> int:
+        b = max(self.min_bucket, 1 << max(n - 1, 0).bit_length())
+        return min(b, self.backend.info.max_len)
+
+    def submit(self, req: Request, at_step: int = 0) -> int:
+        """Enqueue a request (optionally staged to arrive at a later step).
+
+        Returns the request's uid.  Rejects duplicate uids — they would
+        silently overwrite each other in ``done`` and share a PRNG stream.
+        """
+        if req.uid in self._uids:
+            raise ValueError(
+                f"duplicate request uid {req.uid}: uids key finished results "
+                f"and per-request PRNG streams; use auto-assigned uids "
+                f"(Request(prompt) with no uid) or pick a fresh one")
+        plen = int(np.asarray(req.prompt).shape[0]) \
+            if np.asarray(req.prompt).ndim else 0
+        if plen < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        max_len = self.backend.info.max_len
+        if plen > max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {plen} exceeds the "
+                f"backend's max_len {max_len}")
+        if self._bucket(plen) + req.params.max_tokens - 1 > max_len:
+            # past max_len, KV writes clamp/drop silently and every later
+            # token is computed against a corrupted cache — reject up front
+            raise ValueError(
+                f"request {req.uid}: padded prompt ({self._bucket(plen)}) + "
+                f"max_tokens ({req.params.max_tokens}) overflows the "
+                f"backend's cache (max_len {max_len}); lower max_tokens to "
+                f"<= {max_len - self._bucket(plen) + 1} or serve with a "
+                f"larger max_len")
         if req.params.temperature > 0.0 and \
                 self.backend.info.samples_in_backend:
             raise ValueError(
                 f"request {req.uid}: backend samples in-SPMD (greedy); "
                 f"temperature/top_k sampling needs a logits-producing "
                 f"backend (e.g. TensorBackend)")
+        self._uids.add(req.uid)
         self._n_submitted += 1
-        if at_step <= 0:
+        req.timing.submitted_s = time.perf_counter()
+        req.timing.submit_step = self.step_no
+        if at_step <= self.step_no:
             self.queue.append(req)
         else:
             heapq.heappush(self._arrivals,
                            (at_step, self._n_submitted, req))
+        return req.uid
 
+    # ------------------------------------------------------------------ #
+    # sampling
     # ------------------------------------------------------------------ #
     def _sample(self, req: Request, ev: SlotEvent) -> int:
         if ev.logits is None:
             return int(ev.token)        # backend sampled in-SPMD (greedy)
         if req.params.temperature <= 0.0:
             return int(np.argmax(ev.logits))
+        import jax
+        import jax.numpy as jnp
+
+        from repro.serving.engine import sample_logits
+        if self._base_key is None:
+            self._base_key = jax.random.PRNGKey(self._seed)
         key = self._keys.setdefault(
             req.uid, jax.random.fold_in(self._base_key, req.uid))
         self._keys[req.uid], sub = jax.random.split(key)
         return int(sample_logits(sub, jnp.asarray(ev.logits)[None],
                                  req.params)[0])
 
+    # ------------------------------------------------------------------ #
+    # stepping
+    # ------------------------------------------------------------------ #
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self._slot_req or self._arrivals)
+
+    @property
+    def running(self) -> List[int]:
+        return [r.uid for r in self._slot_req.values()]
+
+    @property
+    def pending(self) -> List[int]:
+        return [r.uid for r in self.queue] + \
+            [r.uid for _, _, r in self._arrivals]
+
+    def status(self, uid: int) -> str:
+        if uid in self.done:
+            return "finished"
+        if uid in set(self.running):
+            return "running"
+        if uid in set(self.pending):
+            return "queued"
+        return "unknown"
+
+    def release(self, uid: int) -> Optional[Request]:
+        """Drop a finished request's record and free its uid for reuse.
+
+        Long-running servers call this after consuming a result so ``done``
+        and the uid set do not grow without bound."""
+        req = self.done.pop(uid, None)
+        if req is not None:
+            self._uids.discard(uid)
+        return req
+
+    def _next_wave(self) -> Tuple[int, List[Request]]:
+        """Pull the next admission wave: FIFO head plus every queued request
+        sharing its length bucket, up to the free-slot capacity."""
+        cap = len(self._free)
+        blen = self._bucket(len(self.queue[0].prompt))
+        wave: List[Request] = []
+        keep: Deque[Request] = deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if len(wave) < cap and self._bucket(len(r.prompt)) == blen:
+                wave.append(r)
+            else:
+                keep.append(r)
+        self.queue = keep
+        return blen, wave
+
+    def _handle(self, events: List[SlotEvent], out: List[TokenEvent]):
+        for ev in events:
+            req = self._slot_req.get(ev.slot)
+            if req is None:
+                continue
+            tok = self._sample(req, ev)
+            now = time.perf_counter()
+            if not req.generated:
+                req.timing.first_token_s = now
+                req.timing.first_token_step = self.step_no
+            req.generated.append(tok)
+            reason = req.check_finish()
+            # finish bookkeeping happens BEFORE the event surfaces, so a
+            # finished=True event observes a consistent world: the request
+            # is already in .done with finish_reason/timing set, and
+            # poll(uid) from an on_token callback works
+            if reason is not None:
+                req.finish_reason = reason
+                req.timing.finished_s = now
+                req.timing.finish_step = self.step_no
+                self.done[req.uid] = req
+                self.stats.served += 1
+                self._keys.pop(req.uid, None)
+                self.backend.free_slot(ev.slot)
+                del self._slot_req[ev.slot]
+                self._feeds.pop(ev.slot, None)
+                self._free.append(ev.slot)      # continuous: recycle now
+            else:
+                self._feeds[ev.slot] = tok
+            event = TokenEvent(uid=req.uid, token=tok,
+                               index=len(req.generated) - 1,
+                               step=self.step_no,
+                               finished=reason is not None,
+                               finish_reason=reason)
+            out.append(event)
+            if self.on_token is not None:
+                self.on_token(event)
+
+    def step(self) -> List[TokenEvent]:
+        """Advance one scheduler quantum: release staged arrivals, admit
+        bucketed waves into free slots, run one backend decode quantum.
+        Returns the tokens produced this step (possibly none).  No-op when
+        fully idle."""
+        out: List[TokenEvent] = []
+        while self._arrivals and self._arrivals[0][0] <= self.step_no:
+            self.queue.append(heapq.heappop(self._arrivals)[2])
+        if not (self.queue or self._slot_req or self._arrivals):
+            return out
+        # admission: fill free slots without draining the running batch;
+        # one prefill call per length bucket keeps XLA shapes bounded
+        while self.queue and self._free:
+            blen, wave = self._next_wave()
+            slots = [self._free.popleft() for _ in wave]
+            now = time.perf_counter()
+            padded = np.full((len(wave), blen), self.pad_id, np.int32)
+            for i, (slot, req) in enumerate(zip(slots, wave)):
+                self._slot_req[slot] = req
+                req.timing.admit_step = self.step_no
+                req.timing.admitted_s = now
+                padded[i, blen - len(req.prompt):] = req.prompt  # right-align
+            self.stats.prefills += 1
+            self.stats.prefill_shapes[blen] = \
+                self.stats.prefill_shapes.get(blen, 0) + 1
+            self._handle(self.backend.prefill(slots, padded), out)
+        if self._slot_req:
+            self.stats.decode_steps += 1
+            self.stats.slot_total_steps += self.backend.n_slots
+            self.stats.slot_busy_steps += len(self._slot_req)
+            self._handle(self.backend.decode_step(self._feeds), out)
+        self.step_no += 1
+        return out
+
     def run(self, max_steps: int = 100_000) -> Dict[int, Request]:
-        """Serve until queues drain. Returns finished requests by uid."""
-        n_slots = self.backend.n_slots
-        slot_req: Dict[int, Request] = {}
-        free: Deque[int] = deque(range(n_slots))
-        feeds: Dict[int, int] = {}
-        step = 0
+        """Serve until queues drain.  Returns finished requests by uid.
 
-        def handle(events: List[SlotEvent]):
-            for ev in events:
-                req = slot_req.get(ev.slot)
-                if req is None:
-                    continue
-                tok = self._sample(req, ev)
-                req.generated.append(tok)
-                if req.done:
-                    self.done[req.uid] = req
-                    self.stats.served += 1
-                    self._keys.pop(req.uid, None)
-                    self.backend.free_slot(ev.slot)
-                    del slot_req[ev.slot]
-                    feeds.pop(ev.slot, None)
-                    free.append(ev.slot)        # continuous: recycle now
-                else:
-                    feeds[ev.slot] = tok
-
-        while step < max_steps:
-            while self._arrivals and self._arrivals[0][0] <= step:
-                self.queue.append(heapq.heappop(self._arrivals)[2])
-            if not (self.queue or slot_req or self._arrivals):
-                break
-            # admission: fill free slots without draining the running batch
-            if self.queue and free:
-                slots, prompts = [], []
-                while self.queue and free:
-                    slot = free.popleft()
-                    req = self.queue.popleft()
-                    slot_req[slot] = req
-                    slots.append(slot)
-                    prompts.append(np.asarray(req.prompt, np.int32))
-                self.stats.prefills += 1
-                handle(self.backend.prefill(slots, np.stack(prompts)))
-            if slot_req:
-                self.stats.decode_steps += 1
-                self.stats.slot_total_steps += n_slots
-                self.stats.slot_busy_steps += len(slot_req)
-                handle(self.backend.decode_step(feeds))
-            step += 1
+        Raises :class:`IncompleteServeError` (with the partial ``done`` set
+        attached) if ``max_steps`` is exhausted first — a partial result
+        must never masquerade as a drained workload.
+        """
+        steps = 0
+        while self.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        if self.has_work:
+            self.stats.exhausted = True
+            raise IncompleteServeError(
+                f"run(max_steps={max_steps}) exhausted with "
+                f"{len(self._slot_req)} running {sorted(self.running)} and "
+                f"{len(self.pending)} queued {sorted(self.pending)} requests "
+                f"({len(self.done)} finished; partial results on .done)",
+                done=self.done)
         return self.done

@@ -62,9 +62,10 @@ N, plen, gen = 7, 6, 5
 prompts = rng.integers(0, cfg.vocab_size, (N, plen)).astype(np.int32)
 
 def serve(backend):
-    b = ContinuousBatcher(backend, prompt_len=plen)
+    b = ContinuousBatcher(backend)
     for uid in range(N):
-        b.submit(Request(uid, prompts[uid], SamplingParams(max_tokens=gen)))
+        b.submit(Request(prompts[uid], SamplingParams(max_tokens=gen),
+                         uid=uid))
     done = b.run()
     assert sorted(done) == list(range(N))
     return np.stack([done[u].generated for u in range(N)])
@@ -99,9 +100,9 @@ prompts = np.random.default_rng(1).integers(
     0, cfg.vocab_size, (3, 4)).astype(np.int32)
 
 def serve(be):
-    b = ContinuousBatcher(be, prompt_len=4)
+    b = ContinuousBatcher(be)
     for uid in range(3):
-        b.submit(Request(uid, prompts[uid], SamplingParams(max_tokens=4)))
+        b.submit(Request(prompts[uid], SamplingParams(max_tokens=4), uid=uid))
     done = b.run()
     return np.stack([done[u].generated for u in range(3)])
 
@@ -132,13 +133,12 @@ def test_scheduler_stats_staggered_arrival_completion():
     from repro.serving import ContinuousBatcher, Request, SamplingParams
     cfg, backend = _tiny_tensor_backend(n_slots=2)
     rng = np.random.default_rng(0)
-    b = ContinuousBatcher(backend, prompt_len=8)
-    lengths = {0: 6, 1: 2, 2: 4, 3: 3}
+    b = ContinuousBatcher(backend)
     for uid, (n_tok, at) in enumerate(
             [(6, 0), (2, 0), (4, 3), (3, 8)]):
-        b.submit(Request(uid, rng.integers(0, cfg.vocab_size, 8)
-                         .astype(np.int32),
-                         SamplingParams(max_tokens=n_tok)), at_step=at)
+        b.submit(Request(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                         SamplingParams(max_tokens=n_tok), uid=uid),
+                 at_step=at)
     done = b.run()
     assert sorted(done) == [0, 1, 2, 3]
     for uid, (n_tok, _) in enumerate([(6, 0), (2, 0), (4, 3), (3, 8)]):
@@ -161,15 +161,15 @@ def test_scheduler_per_request_sampling_state():
     rng = np.random.default_rng(3)
     prompts = rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
 
-    b1 = ContinuousBatcher(backend, prompt_len=8, seed=7)
-    b1.submit(Request(0, prompts[0], SamplingParams(max_tokens=5)))
-    b1.submit(Request(1, prompts[1], SamplingParams(max_tokens=5,
-                                                    temperature=1.0)))
+    b1 = ContinuousBatcher(backend, seed=7)
+    b1.submit(Request(prompts[0], SamplingParams(max_tokens=5), uid=0))
+    b1.submit(Request(prompts[1], SamplingParams(max_tokens=5,
+                                                 temperature=1.0), uid=1))
     d1 = b1.run()
 
     _, backend2 = _tiny_tensor_backend(n_slots=2)
-    b2 = ContinuousBatcher(backend2, prompt_len=8, seed=7)
-    b2.submit(Request(0, prompts[0], SamplingParams(max_tokens=5)))
+    b2 = ContinuousBatcher(backend2, seed=7)
+    b2.submit(Request(prompts[0], SamplingParams(max_tokens=5), uid=0))
     d2 = b2.run()
     np.testing.assert_array_equal(d1[0].generated, d2[0].generated)
 
@@ -187,10 +187,10 @@ def test_sim_backend_nobubbles_beats_bubbles():
     thr = {}
     for schedule in ("bubbles", "nobubbles"):
         be = SimBackend(costs, n_slots=6, schedule=schedule)
-        b = ContinuousBatcher(be, prompt_len=4)
+        b = ContinuousBatcher(be)
         for uid in range(6):
-            b.submit(Request(uid, np.zeros(4, np.int32),
-                             SamplingParams(max_tokens=16)))
+            b.submit(Request(np.zeros(4, np.int32),
+                             SamplingParams(max_tokens=16), uid=uid))
         done = b.run()
         assert all(len(r.generated) == 16 for r in done.values())
         thr[schedule] = be.sim_result().throughput

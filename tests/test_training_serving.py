@@ -139,12 +139,12 @@ def test_continuous_batcher_serves_all_requests():
     cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
-    sched = ContinuousBatcher(eng, prompt_len=8)
+    sched = ContinuousBatcher(eng)
     rng = np.random.default_rng(2)
     for uid in range(5):
-        sched.submit(Request(uid, rng.integers(0, cfg.vocab_size, 8)
+        sched.submit(Request(rng.integers(0, cfg.vocab_size, 8)
                              .astype(np.int32),
-                             SamplingParams(max_tokens=4)))
+                             SamplingParams(max_tokens=4), uid=uid))
     done = sched.run()
     assert sorted(done) == list(range(5))
     assert all(len(r.generated) >= 4 for r in done.values())
