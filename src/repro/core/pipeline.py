@@ -38,7 +38,8 @@ from repro.compat import shard_map
 from repro.core.partition import Plan
 from repro.models import transformer as tmod
 from repro.models.config import ModelConfig
-from repro.models.kvcache import cache_logical_axes, init_block_cache
+from repro.models.kvcache import (DEFAULT_BLOCK_SIZE, cache_logical_axes,
+                                  init_block_cache, init_paged_block_cache)
 from repro.models.layers import apply_norm, embed_tokens, lm_logits
 
 PyTree = Any
@@ -153,6 +154,45 @@ def stack_stage_caches(cfg: ModelConfig, spec: PipelineSpec,
             lambda x: jnp.zeros(
                 (spec.n_stages, spec.l_max, n_microbatches) + x.shape,
                 x.dtype) + x, one)
+    return per
+
+
+def stack_stage_caches_paged(cfg: ModelConfig, spec: PipelineSpec,
+                             n_microbatches: int, mb: int, max_len: int,
+                             num_blocks: int,
+                             block_size: int = DEFAULT_BLOCK_SIZE,
+                             dtype=jnp.bfloat16) -> PyTree:
+    """Paged stage caches: every stage owns a block pool *over its own layer
+    range* — attention pool leaves are [n_stages, l_max, NB+1, bs, ...]
+    (no micro-batch axis: slots map blocks via the shared table), while
+    ``key_pos``/``pos`` stay per-micro-batch [n_stages, l_max, M, ...].  One
+    logical block id addresses the same stripe in every stage/layer pool,
+    so a single host-side allocator governs all stages.  Requires mb == 1
+    (request-granular slots, the scheduler's configuration)."""
+    assert mb == 1, "paged pipeline caches require lanes == 1"
+    per = {}
+    for p, bspec in enumerate(cfg.pattern):
+        if bspec.kind == "attn":
+            one = init_paged_block_cache(cfg, bspec, 1, max_len, num_blocks,
+                                         block_size, dtype)
+            entry = {}
+            for k in ("k_pool", "v_pool", "k_scale_pool", "v_scale_pool"):
+                if k in one:
+                    entry[k] = jnp.zeros(
+                        (spec.n_stages, spec.l_max) + one[k].shape,
+                        one[k].dtype)
+            entry["key_pos"] = jnp.full(
+                (spec.n_stages, spec.l_max, n_microbatches,
+                 one["key_pos"].shape[-1]), -1, jnp.int32)
+            entry["pos"] = jnp.zeros(
+                (spec.n_stages, spec.l_max, n_microbatches), jnp.int32)
+            per[f"p{p}"] = entry
+        else:
+            one = init_block_cache(cfg, bspec, mb, max_len, dtype)
+            per[f"p{p}"] = jax.tree.map(
+                lambda x: jnp.zeros(
+                    (spec.n_stages, spec.l_max, n_microbatches) + x.shape,
+                    x.dtype) + x, one)
     return per
 
 
@@ -276,10 +316,20 @@ class PipelineDecodeState:
 
 def init_pipeline_decode_state(cfg: ModelConfig, spec: PipelineSpec,
                                n_microbatches: int, mb: int, max_len: int,
-                               dtype=jnp.bfloat16) -> PipelineDecodeState:
+                               dtype=jnp.bfloat16,
+                               cache_layout: str = "contiguous",
+                               num_blocks: int = 0,
+                               block_size: int = DEFAULT_BLOCK_SIZE,
+                               ) -> PipelineDecodeState:
+    if cache_layout == "paged":
+        caches = stack_stage_caches_paged(cfg, spec, n_microbatches, mb,
+                                          max_len, num_blocks, block_size,
+                                          dtype)
+    else:
+        caches = stack_stage_caches(cfg, spec, n_microbatches, mb, max_len,
+                                    dtype)
     return PipelineDecodeState(
-        caches=stack_stage_caches(cfg, spec, n_microbatches, mb, max_len,
-                                  dtype),
+        caches=caches,
         buf=jnp.zeros((spec.n_stages, mb, cfg.d_model), jnp.dtype(cfg.dtype)),
         buf_mb=jnp.zeros((spec.n_stages,), jnp.int32),
         buf_valid=jnp.zeros((spec.n_stages,), bool),
@@ -297,6 +347,7 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
                          impl: str = "xla",
                          vocab_sharded: bool = False,
                          feed_valid: Optional[jax.Array] = None,
+                         block_tables: Optional[jax.Array] = None,
                          ) -> PipelineDecodeState:
     """One no-bubbles decode tick.
 
@@ -319,16 +370,30 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
     costs two tiny collectives per tick: a psum of the [mb, d] embedding
     partials and a broadcast + tie-aware argmax-combine for sampling.
     Requires ``vocab_size % n_stages == 0``.
+
+    ``block_tables`` ([M, max_ctx_blocks] int32, replicated) switches the
+    KV path to the *paged* layout: each stage holds a block pool over its
+    own layer range (see :func:`stack_stage_caches_paged`) and micro-batch
+    ``m``'s attention state is reached through ``block_tables[m]`` instead
+    of a dense cache slice.  Dead ticks (``feed_valid=False``) redirect
+    their pool writes to the scratch block, extending the warm-up validity
+    mechanism to the shared pool.
     """
     ns = spec.n_stages
     m = state.tokens_out.shape[0]
+    paged = block_tables is not None
     if vocab_sharded:
         assert cfg.vocab_size % ns == 0, (cfg.vocab_size, ns)
     if feed_valid is None:
         feed_valid = jnp.ones((), bool)
+    if not paged:       # keep one jaxpr signature; the dummy operand is dead
+        block_tables = jnp.zeros((m, 1), jnp.int32)
 
     stack_specs = jax.tree.map(lambda _: P(stage_axis), stage_params["stack"])
-    cache_specs = _cache_pspecs(cfg, stage_axis, batch_axes)
+    if paged:           # pools/key_pos/pos all lead with the stage axis only
+        cache_specs = jax.tree.map(lambda _: P(stage_axis), state.caches)
+    else:
+        cache_specs = _cache_pspecs(cfg, stage_axis, batch_axes)
     other = {k: v for k, v in stage_params.items() if k != "stack"}
     other_specs = jax.tree.map(lambda _: P(), other)
     if vocab_sharded:
@@ -338,7 +403,7 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
             other_specs["lm_head"] = P(None, stage_axis)    # [d, V] cols
 
     def body(stack_local, embed_etc, mask_local, caches_l, buf_l, buf_mb_l,
-             buf_valid_l, feed, fvalid, tick):
+             buf_valid_l, feed, fvalid, tick, btab):
         sid = jax.lax.axis_index(stage_axis)
         params_l = dict(embed_etc)
         params_l["stack"] = jax.tree.map(lambda x: x[0], stack_local)
@@ -369,25 +434,53 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
         mb_idx = jnp.where(is_first, fresh_mb, my_mb)
         valid = jnp.where(is_first, fvalid, my_valid)
 
+        bt_slot = jax.lax.dynamic_index_in_dim(btab, mb_idx, 0,
+                                               keepdims=False)
+
         def scan_body(x_c, inp):
             layer_params, layer_caches, lvalid = inp
-            my_cache = jax.tree.map(
-                lambda c: jax.lax.dynamic_index_in_dim(c, mb_idx, 0,
-                                                       keepdims=False),
-                layer_caches)
-            y = x_c
-            nc = {}
-            for p, bspec in enumerate(cfg.pattern):
-                y, c2, _ = tmod._apply_block(cfg, bspec,
-                                             layer_params[f"p{p}"], y, None,
-                                             "decode", my_cache[f"p{p}"], impl)
-                nc[f"p{p}"] = c2
             ok = lvalid & valid
+            y = x_c
+            new_caches = {}
+            for p, bspec in enumerate(cfg.pattern):
+                lc = layer_caches[f"p{p}"]
+                if paged and bspec.kind == "attn":
+                    # pools are layer-wide (no M axis); this micro-batch's
+                    # view = shared pools + its block-table row + its
+                    # key_pos/pos slices.  Writes are gated inside the
+                    # paged attention (scratch redirect + frozen pos), so
+                    # a dead tick cannot touch another slot's blocks.
+                    my = {k: lc[k] for k in
+                          ("k_pool", "v_pool", "k_scale_pool",
+                           "v_scale_pool") if k in lc}
+                    my["bt"] = bt_slot
+                    my["key_pos"] = jax.lax.dynamic_index_in_dim(
+                        lc["key_pos"], mb_idx, 0, keepdims=False)
+                    my["pos"] = jax.lax.dynamic_index_in_dim(
+                        lc["pos"], mb_idx, 0, keepdims=False)
+                    y, c2, _ = tmod._apply_block(
+                        cfg, bspec, layer_params[f"p{p}"], y, None,
+                        "decode", my, impl, write_mask=ok)
+                    nc = {k: c2[k] for k in my if k not in
+                          ("bt", "key_pos", "pos")}
+                    nc["key_pos"] = jax.lax.dynamic_update_index_in_dim(
+                        lc["key_pos"], c2["key_pos"], mb_idx, 0)
+                    nc["pos"] = jax.lax.dynamic_update_index_in_dim(
+                        lc["pos"], c2["pos"], mb_idx, 0)
+                else:
+                    my_cache = jax.tree.map(
+                        lambda c: jax.lax.dynamic_index_in_dim(
+                            c, mb_idx, 0, keepdims=False), lc)
+                    y, c2, _ = tmod._apply_block(
+                        cfg, bspec, layer_params[f"p{p}"], y, None,
+                        "decode", my_cache, impl)
+                    nc = jax.tree.map(
+                        lambda old, new, cur:
+                        jax.lax.dynamic_update_index_in_dim(
+                            old, jnp.where(ok, new, cur), mb_idx, 0),
+                        lc, c2, my_cache)
+                new_caches[f"p{p}"] = nc
             y = jnp.where(ok, y, x_c)
-            new_caches = jax.tree.map(
-                lambda old, new, cur: jax.lax.dynamic_update_index_in_dim(
-                    old, jnp.where(ok, new, cur), mb_idx, 0),
-                layer_caches, nc, my_cache)
             return y, new_caches
 
         x_out, new_caches = jax.lax.scan(scan_body, x_in,
@@ -443,14 +536,14 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
         body, mesh=mesh,
         in_specs=(stack_specs, other_specs, P(stage_axis, None), cache_specs,
                   P(stage_axis, batch_axes, None), P(stage_axis),
-                  P(stage_axis), P(batch_axes), P(), P()),
+                  P(stage_axis), P(batch_axes), P(), P(), P()),
         out_specs=(cache_specs,
                    P(stage_axis, batch_axes, None), P(stage_axis),
                    P(stage_axis), P(None, batch_axes), P(None)),
         check_vma=False,
     )(stage_params["stack"], other, mask, state.caches, state.buf,
       state.buf_mb, state.buf_valid, feed_tokens,
-      jnp.asarray(feed_valid, bool), state.tick)
+      jnp.asarray(feed_valid, bool), state.tick, block_tables)
     new_caches, buf, buf_mb, buf_valid, tok_update, ready = out
 
     tokens_out = jnp.where(ready[:, None], tok_update, state.tokens_out)

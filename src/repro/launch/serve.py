@@ -37,6 +37,17 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--kvint8", action="store_true",
                     help="int8 KV cache (EXPERIMENTS.md §Perf-A3)")
+    ap.add_argument("--cache-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV layout: worst-case per-slot rings, or block "
+                         "tables over a shared pool (vLLM-style)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged layout)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="shared pool size in blocks; 0 = worst-case "
+                         "provisioning (no overcommit).  Smaller pools "
+                         "overcommit: admission goes block-budgeted and "
+                         "exhaustion preempts the youngest request")
     ap.add_argument("--devices", type=int, default=0,
                     help="fake XLA host devices (pipeline mode defaults "
                          "to --stages)")
@@ -80,13 +91,16 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
 
+    kv_kw = dict(cache_layout=args.cache_layout,
+                 block_size=args.block_size,
+                 num_blocks=args.kv_blocks or None)
     if args.mode == "tp":
         mesh = None
         if args.devices:
             mesh = jax.make_mesh((1, args.devices), ("data", "model"))
         llm = LLM.from_backend(runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
-            max_len=args.max_len, mesh=mesh), seed=args.seed)
+            max_len=args.max_len, mesh=mesh, **kv_kw), seed=args.seed)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -99,7 +113,8 @@ def main():
             Workload(prompt_len=args.prompt_len, gen_tokens=args.gen,
                      dtype_bytes=2),
             objective="throughput", kind="pipeline", params=params,
-            n_slots=args.slots or None, max_len=args.max_len, seed=args.seed)
+            n_slots=args.slots or None, max_len=args.max_len, seed=args.seed,
+            **kv_kw)
         n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "

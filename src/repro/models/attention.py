@@ -73,6 +73,10 @@ def _sdpa(cfg: ModelConfig, spec: BlockSpec, q: jax.Array, k: jax.Array,
 
     q [B,Sq,h,hd], k/v [B,Sk,n_kv,hd]; q_pos [Sq], k_pos [Sk] absolute
     positions; mask = causal (k_pos <= q_pos) & window & validity.
+
+    Per-sequence positions (the paged-decode path, where every slot sits at
+    its own position) pass q_pos [B,Sq] / k_pos [B,Sk] (k_valid [B,Sk]); the
+    mask then varies along the batch axis but the math is unchanged.
     """
     b, sq, h, hd = q.shape
     sk = k.shape[1]
@@ -82,12 +86,20 @@ def _sdpa(cfg: ModelConfig, spec: BlockSpec, q: jax.Array, k: jax.Array,
                         preferred_element_type=jnp.float32)
     logits = logits * (hd ** -0.5)
     logits = softcap(logits, cfg.attn_logit_softcap)
-    mask = k_pos[None, :] <= q_pos[:, None]                       # causal
+    # shared positions promote to a broadcastable batch axis, so one mask
+    # expression serves both calling conventions
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+    if k_valid is not None and k_valid.ndim == 1:
+        k_valid = k_valid[None]
+    mask = k_pos[:, None, :] <= q_pos[:, :, None]                 # causal
     if spec.window is not None:
-        mask &= k_pos[None, :] > (q_pos[:, None] - spec.window)
+        mask &= k_pos[:, None, :] > (q_pos[:, :, None] - spec.window)
     if k_valid is not None:
-        mask &= k_valid[None, :]
-    logits = jnp.where(mask[None, None, None, :, :], logits, NEG_INF)
+        mask &= k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bngst,btnd->bsngd", probs.astype(v.dtype), v)
     return out.reshape(b, sq, h * hd)
@@ -248,4 +260,106 @@ def attend_decode(params: Dict, cfg: ModelConfig, spec: BlockSpec,
                      "key_pos": key_pos, "pos": pos + 1}
     else:
         new_cache = {"k": ck, "v": cv, "key_pos": key_pos, "pos": pos + 1}
+    return y, new_cache
+
+
+def attend_decode_paged(params: Dict, cfg: ModelConfig, spec: BlockSpec,
+                        x: jax.Array, cache: Dict, impl: str = "xla",
+                        write_mask: Optional[jax.Array] = None,
+                        ) -> Tuple[jax.Array, Dict]:
+    """One-token decode against a *paged* KV cache. x: [B, 1, d].
+
+    ``cache`` holds the layer's shared block pool plus this batch's view of
+    it (see :func:`repro.models.kvcache.init_paged_block_cache`): ``k_pool``
+    / ``v_pool`` ``[NB+1, bs, n_kv, hd]`` (last block = scratch), ``bt``
+    block table, ``key_pos`` ring positions, ``pos`` decode position.  Two
+    batch semantics, chosen by ``pos``'s rank:
+
+    - **per-slot** (``pos [B]``, ``bt [B, nbs]``, ``key_pos [B, C]``) — each
+      batch row is an independent slot at its own position (TensorBackend's
+      batched decode),
+    - **shared** (``pos`` scalar, ``bt [nbs]``, ``key_pos [C]``) — the batch
+      shares one position stream (the pipeline tick's micro-batch; B == 1).
+
+    The new k/v are **scattered into the pool first, then gathered back** in
+    ring order, so the attended key set is element-for-element identical to
+    the contiguous ring buffer (extra never-written tail slots contribute
+    exact zeros through the masked softmax) — greedy decode parity between
+    layouts is exact, not approximate.  ``write_mask`` (bool, [B] or scalar)
+    redirects masked rows' writes to the scratch block and freezes their
+    ``key_pos``/``pos``, so idle slots and dead pipeline ticks can never
+    touch another slot's blocks.
+
+    ``impl`` is accepted for signature parity; the paged path always uses
+    the (gather + masked-sdpa) XLA math — the Pallas decode kernel reads a
+    contiguous cache and is dispatched only by :func:`attend_decode`.
+    """
+    b = x.shape[0]
+    shared = cache["pos"].ndim == 0
+    if shared:
+        assert b == 1, "shared-position paged decode supports a single lane"
+        pos = cache["pos"][None]
+        bt = cache["bt"][None]
+        key_pos = cache["key_pos"][None]
+    else:
+        pos, bt, key_pos = cache["pos"], cache["bt"], cache["key_pos"]
+    c_pad = key_pos.shape[-1]
+    bsz = cache["k_pool"].shape[1]                    # tokens per block
+    nbs = c_pad // bsz                                # this spec's table span
+    scratch = cache["k_pool"].shape[0] - 1
+    positions = pos[:, None]                                      # [B, 1]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    # scatter this token's k/v into its slot's current block (or scratch)
+    ring = pos % c_pad                                            # [B]
+    blk, off = ring // bsz, ring % bsz
+    phys = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]    # [B]
+    tgt = jnp.where(phys >= 0, phys, scratch)
+    wmask = None
+    if write_mask is not None:
+        wmask = jnp.broadcast_to(jnp.asarray(write_mask, bool), (b,))
+        tgt = jnp.where(wmask, tgt, scratch)
+    quant = cfg.kv_dtype == "int8"
+    if quant:
+        k8, ks = _quantize_kv(k)
+        v8, vs = _quantize_kv(v)
+        kp = cache["k_pool"].at[tgt, off].set(k8[:, 0])
+        vp = cache["v_pool"].at[tgt, off].set(v8[:, 0])
+        ksp = cache["k_scale_pool"].at[tgt, off].set(ks[:, 0])
+        vsp = cache["v_scale_pool"].at[tgt, off].set(vs[:, 0])
+    else:
+        kp = cache["k_pool"].at[tgt, off].set(
+            k[:, 0].astype(cache["k_pool"].dtype))
+        vp = cache["v_pool"].at[tgt, off].set(
+            v[:, 0].astype(cache["v_pool"].dtype))
+
+    new_key_pos = key_pos.at[jnp.arange(b), ring].set(pos.astype(jnp.int32))
+    new_pos = pos + 1
+    if wmask is not None:
+        new_key_pos = jnp.where(wmask[:, None], new_key_pos, key_pos)
+        new_pos = jnp.where(wmask, new_pos, pos)
+
+    # gather the slot's blocks back in ring order ([B, C_pad, n_kv, hd]);
+    # unmapped entries read block 0 garbage, masked via key_pos == -1
+    read = jnp.clip(bt[:, :nbs], 0, None)
+    if quant:
+        ck = _dequantize_kv(kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                            ksp[read].reshape(b, c_pad, cfg.n_kv_heads),
+                            k.dtype)
+        cv = _dequantize_kv(vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                            vsp[read].reshape(b, c_pad, cfg.n_kv_heads),
+                            v.dtype)
+    else:
+        ck = kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+        cv = vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+    out = _sdpa(cfg, spec, q, ck, cv, positions, new_key_pos,
+                k_valid=new_key_pos >= 0)
+    y = out @ params["wo"]
+    y = logical_constraint(y, "batch", None, "embed")
+    new_cache = {"k_pool": kp, "v_pool": vp, "bt": cache["bt"],
+                 "key_pos": new_key_pos if not shared else new_key_pos[0],
+                 "pos": new_pos if not shared else new_pos[0]}
+    if quant:
+        new_cache["k_scale_pool"] = ksp
+        new_cache["v_scale_pool"] = vsp
     return y, new_cache

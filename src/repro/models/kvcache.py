@@ -19,8 +19,97 @@ import jax.numpy as jnp
 from repro.models.config import BlockSpec, ModelConfig
 
 
+#: vLLM-style paging granularity: tokens per KV block.
+DEFAULT_BLOCK_SIZE = 16
+
+
 def attn_cache_len(spec: BlockSpec, max_len: int) -> int:
+    """Ring-buffer length for one attention spec.
+
+    Windowed specs clamp to ``max_len`` — a window larger than the serving
+    length degenerates to full attention and must be *accounted* at the
+    clamped length too (paged pools and ``cache_bytes_per_slot`` both size
+    from this value, so they always agree).
+    """
     return min(max_len, spec.window) if spec.window else max_len
+
+
+def paged_cache_len(spec: BlockSpec, max_len: int,
+                    block_size: int = DEFAULT_BLOCK_SIZE) -> int:
+    """`attn_cache_len` rounded up to whole blocks (the gathered width).
+
+    Positions ``attn_cache_len .. paged_cache_len-1`` are never written and
+    stay masked via ``key_pos == -1``.
+    """
+    c = attn_cache_len(spec, max_len)
+    return -(-c // block_size) * block_size
+
+
+def max_ctx_blocks(cfg: ModelConfig, max_len: int,
+                   block_size: int = DEFAULT_BLOCK_SIZE) -> int:
+    """Most blocks one slot can hold = blocks of the largest (clamped)
+    attention cache across the pattern + tail.  0 for attention-free models."""
+    specs = [s for s in cfg.layer_specs() if s.kind == "attn"]
+    if not specs:
+        return 0
+    return max(-(-attn_cache_len(s, max_len) // block_size) for s in specs)
+
+
+def block_pool_bytes_per_block(cfg: ModelConfig, dtype=jnp.bfloat16) -> int:
+    """Bytes one logical block occupies summed over every attention layer
+    (each layer materializes the block id space in its own pool)."""
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    if cfg.kv_dtype == "int8":
+        per_tok = 2 * nkv * hd * 1 + 2 * nkv * 4        # k/v int8 + scales
+    else:
+        per_tok = 2 * nkv * hd * jnp.dtype(dtype).itemsize
+    n_attn = sum(1 for s in cfg.layer_specs() if s.kind == "attn")
+    return per_tok * n_attn
+
+
+def init_paged_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                           max_len: int, num_blocks: int,
+                           block_size: int = DEFAULT_BLOCK_SIZE,
+                           dtype=jnp.bfloat16) -> Dict:
+    """Paged twin of :func:`init_block_cache` for ``spec.kind == "attn"``.
+
+    Layout per layer (non-attn kinds keep their dense cache):
+
+    - ``k_pool``/``v_pool`` ``[num_blocks+1, block_size, n_kv, head_dim]`` —
+      the shared pool; the **last block is scratch**: writes whose block-table
+      entry is unallocated (or whose slot is masked) are redirected there so
+      they can never corrupt another slot's blocks,
+    - ``bt`` ``[B, max_ctx_blocks]`` int32 physical block ids (-1 = unmapped),
+    - ``key_pos`` ``[B, paged_cache_len]`` absolute position per ring slot
+      (-1 = empty) — per-slot, unlike the contiguous batch-shared layout,
+    - ``pos`` ``[B]`` per-slot decode position.
+    """
+    assert spec.kind == "attn", spec.kind
+    c = paged_cache_len(spec, max_len, block_size)
+    nbs = max_ctx_blocks(cfg, max_len, block_size)
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    out = {
+        "bt": jnp.full((batch, max(nbs, 1)), -1, jnp.int32),
+        "key_pos": jnp.full((batch, c), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.kv_dtype == "int8":
+        out["k_pool"] = jnp.zeros((num_blocks + 1, block_size, nkv, hd),
+                                  jnp.int8)
+        out["v_pool"] = jnp.zeros((num_blocks + 1, block_size, nkv, hd),
+                                  jnp.int8)
+        out["k_scale_pool"] = jnp.zeros((num_blocks + 1, block_size, nkv),
+                                        jnp.float32)
+        out["v_scale_pool"] = jnp.zeros((num_blocks + 1, block_size, nkv),
+                                        jnp.float32)
+    else:
+        out["k_pool"] = jnp.zeros((num_blocks + 1, block_size, nkv, hd), dtype)
+        out["v_pool"] = jnp.zeros((num_blocks + 1, block_size, nkv, hd), dtype)
+    return out
+
+
+def is_paged_attn_cache(cache: Dict) -> bool:
+    return isinstance(cache, dict) and "k_pool" in cache
 
 
 def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,

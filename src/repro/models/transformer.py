@@ -24,7 +24,9 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.config import BlockSpec, ModelConfig
-from repro.models.kvcache import cache_logical_axes, init_block_cache
+from repro.models.kvcache import (DEFAULT_BLOCK_SIZE, cache_logical_axes,
+                                  init_block_cache, init_paged_block_cache,
+                                  is_paged_attn_cache)
 from repro.models.layers import (ParamBuilder, apply_mlp, apply_norm,
                                  embed_tokens, init_embedding, init_mlp,
                                  init_norm, lm_logits, sinusoidal_embedding)
@@ -122,6 +124,47 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      num_blocks: int,
+                      block_size: int = DEFAULT_BLOCK_SIZE,
+                      dtype=jnp.bfloat16) -> PyTree:
+    """Paged twin of :func:`init_caches`: attention entries hold shared
+    block pools + per-slot block tables (``batch`` = slots); non-attention
+    entries keep their dense per-slot state, with ``pos`` widened to [B] so
+    every slot owns its position in the batched (vmap-free) decode."""
+    def one_entry(spec: BlockSpec, stack_layers: int = 0):
+        if spec.kind == "attn":
+            one = init_paged_block_cache(cfg, spec, batch, max_len,
+                                         num_blocks, block_size, dtype)
+        else:
+            one = init_block_cache(cfg, spec, batch, max_len, dtype)
+            one["pos"] = jnp.zeros((batch,), jnp.int32)
+        if stack_layers:
+            one = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (stack_layers,) + x.shape).copy(), one)
+        return one
+
+    caches: Dict[str, Any] = {}
+    if cfg.n_full_periods > 0:
+        caches["stack"] = {f"p{p}": one_entry(spec, cfg.n_full_periods)
+                           for p, spec in enumerate(cfg.pattern)}
+    if cfg.tail:
+        caches["tail"] = {f"t{t}": one_entry(spec)
+                          for t, spec in enumerate(cfg.tail)}
+    return caches
+
+
+def caches_are_paged(caches: PyTree) -> bool:
+    """True when the cache pytree came from :func:`init_paged_caches` (i.e.
+    holds at least one attention block pool)."""
+    for group in ("stack", "tail"):
+        for entry in (caches.get(group) or {}).values():
+            if is_paged_attn_cache(entry):
+                return True
+    return False
+
+
 def cache_axes(cfg: ModelConfig) -> PyTree:
     axes: Dict[str, Any] = {}
     if cfg.n_full_periods > 0:
@@ -143,8 +186,10 @@ def cache_axes(cfg: ModelConfig) -> PyTree:
 def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
                  x: jax.Array, positions: jax.Array, mode: str,
                  cache: Optional[Dict], impl: str,
+                 write_mask: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
-    """Returns (x_out, new_cache, aux_loss)."""
+    """Returns (x_out, new_cache, aux_loss).  ``write_mask`` gates paged
+    KV-pool writes (idle slots / dead pipeline ticks scatter to scratch)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x, cfg.norm)
     new_cache = cache
@@ -154,6 +199,10 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
         elif mode == "prefill":
             mix, new_cache = attn.prefill_cache(params["mixer"], cfg, spec, h,
                                                 positions, cache, impl)
+        elif is_paged_attn_cache(cache):
+            mix, new_cache = attn.attend_decode_paged(
+                params["mixer"], cfg, spec, h, cache, impl,
+                write_mask=write_mask)
         else:
             mix, new_cache = attn.attend_decode(params["mixer"], cfg, spec, h,
                                                 cache, impl)
@@ -209,7 +258,10 @@ def _embed_inputs(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
     else:
         x = inputs.astype(jnp.dtype(cfg.dtype))     # stub frontend embeddings
     if cfg.pos_emb == "sinusoidal":
-        x = x + sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)[None]
+        emb = sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+        # positions [S] (shared) -> emb [S,d] broadcast over batch;
+        # positions [B,S] (per-slot paged decode) -> emb [B,S,d] as-is
+        x = x + (emb if emb.ndim == x.ndim else emb[None])
     return logical_constraint(x, "batch", None, "embed")
 
 
@@ -269,17 +321,24 @@ def forward(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
                 caches: PyTree, impl: str = "xla",
+                write_mask: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, PyTree]:
     """One decode step. inputs: [B] int tokens or [B, d] embeddings.
 
     Returns (logits [B, vocab], updated caches).
+
+    Contiguous caches share one position across the batch (callers vmap for
+    per-slot positions).  Paged caches (:func:`init_paged_caches`) carry
+    per-slot ``pos [B]`` and run the whole batch in one pass — every slot at
+    its own position, KV gathered/scattered through its block table;
+    ``write_mask [B]`` freezes masked slots' pool writes.
     """
     if inputs.ndim == 1 and jnp.issubdtype(inputs.dtype, jnp.integer):
         inputs2 = inputs[:, None]
     else:
         inputs2 = inputs[:, None, :]
     pos = _first_pos(caches)
-    positions = pos[None]
+    positions = pos[..., None] if pos.ndim else pos[None]   # [B,1] | [1]
     x = _embed_inputs(cfg, params, inputs2, positions)
     new_caches: Dict[str, Any] = {}
 
@@ -290,7 +349,8 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
             for p, spec in enumerate(cfg.pattern):
                 x_c, nc, _ = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
                                           positions, "decode",
-                                          p_caches[f"p{p}"], impl)
+                                          p_caches[f"p{p}"], impl,
+                                          write_mask=write_mask)
                 new_p[f"p{p}"] = nc
             return x_c, new_p
 
@@ -302,7 +362,8 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
         for t, spec in enumerate(cfg.tail):
             x, nc, _ = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
                                     positions, "decode",
-                                    caches["tail"][f"t{t}"], impl)
+                                    caches["tail"][f"t{t}"], impl,
+                                    write_mask=write_mask)
             new_tail[f"t{t}"] = nc
         new_caches["tail"] = new_tail
 
@@ -312,11 +373,19 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
 
 
 def _first_pos(caches: PyTree) -> jax.Array:
-    """Current decode position = pos of the first cache leaf."""
+    """Current decode position(s): scalar (contiguous, batch-shared) or [B]
+    (paged, per-slot).  Prefer an attention entry — in paged trees its
+    ``pos`` is authoritative per slot."""
+    entries = []
     if "stack" in caches:
-        first = caches["stack"]["p0"]["pos"]
-        return first[0]
-    return caches["tail"]["t0"]["pos"]
+        entries += [(e, True) for e in caches["stack"].values()]
+    if "tail" in caches:
+        entries += [(e, False) for e in caches["tail"].values()]
+    for e, stacked in entries:
+        if is_paged_attn_cache(e):
+            return e["pos"][0] if stacked else e["pos"]
+    e, stacked = entries[0]
+    return e["pos"][0] if stacked else e["pos"]
 
 
 # --------------------------------------------------------------------------- #

@@ -1,11 +1,13 @@
 """Unified serving runtime: one backend protocol over the tensor-parallel
 engine, the EdgeShard stage pipeline, and the planner's cost simulator."""
-from repro.runtime.base import (BackendInfo, InferenceBackend, SlotEvent)
+from repro.runtime.base import (BackendInfo, BlockAllocator, InferenceBackend,
+                                PoolExhausted, SlotEvent, SlotPager)
 from repro.runtime.factory import from_deployment, plan_pipeline_spec
 from repro.runtime.sim import SimBackend
 
 __all__ = [
-    "BackendInfo", "InferenceBackend", "SlotEvent",
+    "BackendInfo", "BlockAllocator", "InferenceBackend", "PoolExhausted",
+    "SlotEvent", "SlotPager",
     "from_deployment", "plan_pipeline_spec", "SimBackend",
     "TensorBackend", "PipelineBackend",
 ]

@@ -22,10 +22,155 @@ scheduler applies the request's own sampling params.
 from __future__ import annotations
 
 import abc
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """A paged backend could not allocate KV blocks for its next quantum.
+
+    Raised *before* any state mutates, so the quantum can be retried after
+    the scheduler frees capacity (preempt-and-requeue the youngest request).
+    """
+
+    def __init__(self, needed: int, free: int):
+        super().__init__(f"KV block pool exhausted: need {needed} block(s), "
+                         f"{free} free")
+        self.needed = needed
+        self.free = free
+
+
+class BlockAllocator:
+    """Free-list + refcount allocator over ``num_blocks`` logical KV blocks.
+
+    Pure host-side bookkeeping (numpy/int only — importable without jax).
+    Block ids are indices into the backend's device pools; every attention
+    layer materializes the same id space in its own pool storage, so one
+    logical block backs one (block_size-token) stripe of every layer's cache.
+    Refcounts exist so future prefix sharing can map one block into several
+    slots; today each block has refcount 1.
+    """
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 0
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.refcount = np.zeros(num_blocks, np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` blocks atomically; raises :class:`PoolExhausted`
+        (allocating nothing) when fewer than ``n`` are free."""
+        if n > len(self._free):
+            raise PoolExhausted(needed=n, free=len(self._free))
+        out = [self._free.pop() for _ in range(n)]
+        self.refcount[out] += 1
+        return out
+
+    def incref(self, block: int) -> None:
+        assert self.refcount[block] > 0, f"incref of free block {block}"
+        self.refcount[block] += 1
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            assert self.refcount[b] > 0, f"double free of block {b}"
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                self._free.append(int(b))
+
+
+class SlotPager:
+    """Per-slot block tables over one :class:`BlockAllocator`.
+
+    ``max_ctx_blocks`` is the most blocks one slot can ever hold — derived
+    from the *clamped* attention cache length (``attn_cache_len``), so
+    windowed specs with ``window > max_len`` account for ``max_len`` tokens,
+    never the nominal window.  The table grows in position order; ring reuse
+    past the cache length allocates nothing (the ring slot maps to an
+    already-held block).
+    """
+
+    def __init__(self, n_slots: int, num_blocks: int, block_size: int,
+                 max_ctx_blocks: int, table_width: Optional[int] = None):
+        assert block_size >= 1
+        self.block_size = block_size
+        self.max_ctx_blocks = max_ctx_blocks
+        self.allocator = BlockAllocator(num_blocks)
+        # -1 = unallocated; device side redirects -1 writes to scratch.
+        # Device backends keep the full max_ctx_blocks width (the gather
+        # spans it); accounting-only users (SimBackend with unbounded
+        # max_len) cap it at the pool size a slot could ever hold.
+        width = max_ctx_blocks if table_width is None else table_width
+        self.table = np.full((n_slots, max(width, 1)), -1, np.int32)
+        self.n_alloc = np.zeros(n_slots, np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_blocks
+
+    @property
+    def total_blocks(self) -> int:
+        return self.allocator.num_blocks
+
+    def blocks_for_len(self, n_tokens: int) -> int:
+        """Blocks a sequence of ``n_tokens`` occupies (window-clamped)."""
+        if n_tokens <= 0:
+            return 0
+        need = -(-n_tokens // self.block_size)          # ceil div
+        return min(need, self.max_ctx_blocks)
+
+    def blocks_needed(self, slot: int, pos: int) -> int:
+        """Blocks that must be allocated before writing position ``pos``."""
+        return max(self.blocks_for_len(pos + 1) - int(self.n_alloc[slot]), 0)
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Grow ``slot``'s table so position ``pos`` is backed by a block.
+
+        Returns True when the table changed.  Raises :class:`PoolExhausted`
+        (mutating nothing) when the pool cannot cover the growth.
+        """
+        need = self.blocks_needed(slot, pos)
+        if not need:
+            return False
+        new = self.allocator.alloc(need)
+        lo = int(self.n_alloc[slot])
+        self.table[slot, lo:lo + need] = new
+        self.n_alloc[slot] = lo + need
+        return True
+
+    def release(self, slot: int) -> bool:
+        """Free every block ``slot`` holds.  Returns True if any were held."""
+        n = int(self.n_alloc[slot])
+        if not n:
+            return False
+        self.allocator.free(self.table[slot, :n].tolist())
+        self.table[slot, :n] = -1
+        self.n_alloc[slot] = 0
+        return True
+
+    def realloc_wave(self, slots: Sequence[int], n_tokens: int) -> None:
+        """Release every slot in an admission wave, then grow each table to
+        cover ``n_tokens`` prompt positions — atomically: on
+        :class:`PoolExhausted` the partial growth is rolled back (the wave's
+        slots end empty, which is what they were: freed slots being
+        re-admitted), so the caller can preempt and retry."""
+        for s in slots:
+            self.release(s)
+        grown: List[int] = []
+        try:
+            for s in slots:
+                self.ensure(s, n_tokens - 1)
+                grown.append(s)
+        except PoolExhausted:
+            for s in grown:
+                self.release(s)
+            raise
 
 
 @dataclass
@@ -42,13 +187,42 @@ class SlotEvent:
 
 @dataclass(frozen=True)
 class BackendInfo:
-    """Capacity / memory metadata the scheduler and planner can introspect."""
+    """Capacity / memory metadata the scheduler and planner can introspect.
+
+    ``cache_layout`` is ``"contiguous"`` (one worst-case ``max_len`` cache
+    per slot) or ``"paged"`` (slots map block tables into a shared pool).
+    For paged backends ``cache_bytes_per_slot`` is the *provisioned* share
+    (pool bytes / n_slots) — honest rather than worst-case, and smaller than
+    the contiguous figure whenever the pool overcommits — and
+    ``free_blocks`` is a live count (the backend rebuilds ``info`` per read).
+    """
 
     n_slots: int
     max_len: int
     cache_bytes_per_slot: int = 0
     param_bytes: int = 0
     samples_in_backend: bool = False   # True -> events carry tokens, not logits
+    cache_layout: str = "contiguous"   # "contiguous" | "paged"
+    block_size: int = 0                # tokens per KV block (paged only)
+    total_blocks: int = 0              # shared pool size (paged only)
+    free_blocks: int = 0               # live unallocated blocks (paged only)
+    bytes_per_block: int = 0           # summed over every attention layer
+    max_ctx_blocks: int = 0            # most blocks one slot can ever hold
+
+    @property
+    def paged(self) -> bool:
+        return self.cache_layout == "paged"
+
+    @property
+    def blocks_per_token(self) -> float:
+        """Marginal pool demand per generated token (0 when contiguous)."""
+        return 1.0 / self.block_size if self.paged and self.block_size else 0.0
+
+    def blocks_for_len(self, n_tokens: int) -> int:
+        """Blocks a sequence of ``n_tokens`` occupies (window-clamped)."""
+        if not self.paged or n_tokens <= 0:
+            return 0
+        return min(-(-n_tokens // self.block_size), self.max_ctx_blocks)
 
     @property
     def cache_bytes(self) -> int:
@@ -62,6 +236,16 @@ class InferenceBackend(abc.ABC):
     @abc.abstractmethod
     def info(self) -> BackendInfo:
         ...
+
+    def _live_info(self) -> BackendInfo:
+        """Shared ``info`` body for paged backends: refresh the frozen
+        construction-time snapshot (``self._info``) with the pager's live
+        free-block count.  Backends without a pager return the snapshot."""
+        info = self._info
+        pager = getattr(self, "pager", None)
+        if pager is None:
+            return info
+        return dataclasses.replace(info, free_blocks=pager.free_blocks)
 
     @property
     def n_slots(self) -> int:

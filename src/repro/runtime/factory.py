@@ -51,8 +51,16 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
                     mesh=None, n_slots: Optional[int] = None, lanes: int = 1,
                     max_len: int = 256, cache_dtype=None,
                     schedule: str = "nobubbles", impl: str = "xla",
+                    cache_layout: str = "contiguous", block_size: int = 16,
+                    num_blocks: Optional[int] = None,
                     ) -> InferenceBackend:
-    """Materialize a planned deployment as a serving backend."""
+    """Materialize a planned deployment as a serving backend.
+
+    ``cache_layout="paged"`` provisions a shared KV block pool (``num_blocks``
+    blocks of ``block_size`` tokens; default = no overcommit) instead of
+    worst-case per-slot caches — all three kinds honour it (``sim`` keeps
+    accounting only).
+    """
     assert deployment.ok, f"deployment {deployment.method} is OOM-infeasible"
     plan = deployment.plan
     n_stages = len(plan.stages)
@@ -63,7 +71,9 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
         costs = build_stage_costs(profile, cluster, plan, mb_batch=mb)
         return SimBackend(costs, n_slots=n_slots or 2 * n_stages,
                           mb_batch=mb, schedule=schedule,
-                          vocab_size=cfg.vocab_size)
+                          vocab_size=cfg.vocab_size, max_len=max_len,
+                          cache_layout=cache_layout, block_size=block_size,
+                          num_blocks=num_blocks)
 
     assert params is not None, f"kind={kind!r} needs model params"
     import jax.numpy as jnp
@@ -74,7 +84,9 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
         return TensorBackend(cfg, params,
                              n_slots=n_slots or max(deployment.batch, 1),
                              max_len=max_len, mesh=mesh, impl=impl,
-                             cache_dtype=cache_dtype)
+                             cache_dtype=cache_dtype,
+                             cache_layout=cache_layout,
+                             block_size=block_size, num_blocks=num_blocks)
 
     if kind == "pipeline":
         import jax
@@ -85,6 +97,8 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
             mesh = jax.make_mesh((1, n_stages), ("data", "model"))
         return PipelineBackend(cfg, params, spec, mesh,
                                n_slots=n_slots, lanes=lanes, max_len=max_len,
-                               cache_dtype=cache_dtype, impl=impl)
+                               cache_dtype=cache_dtype, impl=impl,
+                               cache_layout=cache_layout,
+                               block_size=block_size, num_blocks=num_blocks)
 
     raise ValueError(f"unknown backend kind {kind!r}")

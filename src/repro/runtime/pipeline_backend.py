@@ -20,6 +20,15 @@ The quantum is one tick.  Each ``decode_step`` feeds micro-batch
 ticks ago, whose greedily sampled token rode the ring back to stage 0 — so
 events carry ``token``, not ``logits`` (greedy-only, like the paper's
 last-stage sampling).
+
+``cache_layout="paged"`` swaps each stage's dense per-micro-batch KV for a
+block pool over the stage's own layer range (``models/kvcache.py``), with
+one host-side allocator (:class:`~repro.runtime.base.SlotPager`) governing
+the logical block id space across all stages.  Blocks are allocated
+*lazily*, one table growth per tick as the teacher-forced/decode position
+crosses a block boundary; when the pool cannot cover the next tick the
+backend raises :class:`~repro.runtime.base.PoolExhausted` before mutating
+anything, and the scheduler preempts.  Paged slots require ``lanes == 1``.
 """
 from __future__ import annotations
 
@@ -30,8 +39,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as PL
+from repro.models import kvcache as KV
 from repro.models.config import ModelConfig
-from repro.runtime.base import BackendInfo, InferenceBackend, SlotEvent
+from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
+                                SlotEvent, SlotPager)
 
 PyTree = Any
 
@@ -43,7 +54,11 @@ class PipelineBackend(InferenceBackend):
                  mesh, *, n_slots: Optional[int] = None, lanes: int = 1,
                  max_len: int = 256, cache_dtype=jnp.float32,
                  stage_axis: str = "model",
-                 batch_axes: Tuple[str, ...] = ("data",), impl: str = "xla"):
+                 batch_axes: Tuple[str, ...] = ("data",), impl: str = "xla",
+                 cache_layout: str = "contiguous",
+                 block_size: int = KV.DEFAULT_BLOCK_SIZE,
+                 num_blocks: Optional[int] = None):
+        assert cache_layout in ("contiguous", "paged"), cache_layout
         m = n_slots or spec.n_stages
         assert m >= spec.n_stages, \
             f"need >= {spec.n_stages} micro-batch slots for no bubbles"
@@ -52,44 +67,108 @@ class PipelineBackend(InferenceBackend):
         self.mesh = mesh
         self.lanes = lanes
         self.max_len = max_len
+        self.cache_layout = cache_layout
+        self.block_size = block_size
         self._m = m
+
+        nbs = KV.max_ctx_blocks(cfg, max_len, block_size)
+        self._paged_exec = cache_layout == "paged" and nbs > 0
+        self.num_blocks = 0
+        self.pager: Optional[SlotPager] = None
+        if cache_layout == "paged":
+            assert lanes == 1, "paged pipeline caches require lanes == 1"
+            self.num_blocks = num_blocks if num_blocks is not None \
+                else m * nbs
+            self.pager = SlotPager(m, self.num_blocks, block_size, nbs)
 
         with mesh:
             self.stage_params, self.mask = PL.stack_stage_params(cfg, params,
                                                                  spec)
-            self.state = PL.init_pipeline_decode_state(cfg, spec, m, lanes,
-                                                       max_len, cache_dtype)
-        # pristine per-slot cache slice for admission-time resets (all slots
-        # of a fresh state are identical)
-        self._fresh_slot = jax.tree.map(lambda x: x[:, :, 0],
-                                        self.state.caches)
+            self.state = PL.init_pipeline_decode_state(
+                cfg, spec, m, lanes, max_len, cache_dtype,
+                cache_layout="paged" if self._paged_exec else "contiguous",
+                num_blocks=self.num_blocks, block_size=block_size)
+        # pristine per-slot cache slices for admission-time resets.  Paged
+        # attention entries hold no per-slot pool state — only key_pos/pos
+        # rows are reset (their blocks return to the allocator host-side).
+        if not self._paged_exec:
+            self._fresh_slot = jax.tree.map(lambda x: x[:, :, 0],
+                                            self.state.caches)
 
-        def _tick(stage_params, mask, state, feed, feed_valid):
+        def _tick(stage_params, mask, state, feed, feed_valid, btab):
+            return PL.pipeline_decode_tick(
+                cfg, stage_params, mask, state, feed, spec, mesh,
+                stage_axis=stage_axis, batch_axes=batch_axes, impl=impl,
+                feed_valid=feed_valid, block_tables=btab)
+
+        def _tick_contig(stage_params, mask, state, feed, feed_valid):
             return PL.pipeline_decode_tick(
                 cfg, stage_params, mask, state, feed, spec, mesh,
                 stage_axis=stage_axis, batch_axes=batch_axes, impl=impl,
                 feed_valid=feed_valid)
 
-        self._tick_fn = jax.jit(_tick)
+        self._tick_fn = jax.jit(_tick if self._paged_exec else _tick_contig)
 
-        def _reset(state: PL.PipelineDecodeState, slot) -> PL.PipelineDecodeState:
-            caches = jax.tree.map(
-                lambda full, fresh: full.at[:, :, slot].set(fresh),
-                state.caches, self._fresh_slot)
-            return PL.PipelineDecodeState(
-                caches=caches, buf=state.buf, buf_mb=state.buf_mb,
-                buf_valid=state.buf_valid,
-                tokens_out=state.tokens_out.at[slot].set(0),
-                token_ready=state.token_ready.at[slot].set(False),
-                tick=state.tick)
+        if self._paged_exec:
+            def _reset(state: PL.PipelineDecodeState,
+                       slot) -> PL.PipelineDecodeState:
+                caches = {}
+                for key, entry in state.caches.items():
+                    if KV.is_paged_attn_cache(entry):
+                        e = dict(entry)
+                        e["key_pos"] = entry["key_pos"].at[:, :, slot].set(-1)
+                        e["pos"] = entry["pos"].at[:, :, slot].set(0)
+                        caches[key] = e
+                    else:
+                        caches[key] = jax.tree.map(
+                            lambda full: full.at[:, :, slot].set(
+                                jnp.zeros_like(full[:, :, 0])), entry)
+                return PL.PipelineDecodeState(
+                    caches=caches, buf=state.buf, buf_mb=state.buf_mb,
+                    buf_valid=state.buf_valid,
+                    tokens_out=state.tokens_out.at[slot].set(0),
+                    token_ready=state.token_ready.at[slot].set(False),
+                    tick=state.tick)
+        else:
+            def _reset(state: PL.PipelineDecodeState,
+                       slot) -> PL.PipelineDecodeState:
+                caches = jax.tree.map(
+                    lambda full, fresh: full.at[:, :, slot].set(fresh),
+                    state.caches, self._fresh_slot)
+                return PL.PipelineDecodeState(
+                    caches=caches, buf=state.buf, buf_mb=state.buf_mb,
+                    buf_valid=state.buf_valid,
+                    tokens_out=state.tokens_out.at[slot].set(0),
+                    token_ready=state.token_ready.at[slot].set(False),
+                    tick=state.tick)
 
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
+
+        def _kill(state: PL.PipelineDecodeState,
+                  slot) -> PL.PipelineDecodeState:
+            # invalidate any in-flight activation of this micro-batch so a
+            # preempted slot's remaining stage passes write nothing (their
+            # validity flag gates cache/pool writes stage by stage)
+            return PL.PipelineDecodeState(
+                caches=state.caches, buf=state.buf, buf_mb=state.buf_mb,
+                buf_valid=state.buf_valid & (state.buf_mb != slot),
+                tokens_out=state.tokens_out, token_ready=state.token_ready,
+                tick=state.tick)
+
+        self._kill_fn = jax.jit(_kill, donate_argnums=(0,))
 
         self._tick = 0
         self._prompts: Dict[int, np.ndarray] = {}       # slot -> [plen, lanes]
         self._rounds: Dict[int, int] = {}               # feeds so far
         self._gen_ready: Dict[int, int] = {}            # generated tokens seen
-        self._inflight: Dict[int, Tuple[int, int]] = {} # feed tick -> (slot, r)
+        # feed tick -> (slot, round, occupancy epoch): the epoch guard drops
+        # completions of a preempted occupancy that were still in the ring
+        # when the slot was freed and re-admitted
+        self._inflight: Dict[int, Tuple[int, int, int]] = {}
+        self._epoch: Dict[int, int] = {}
+        self._bt_dev = jnp.asarray(self.pager.table) if self._paged_exec \
+            else None
+        self._bt_dirty = False
 
         cache_bytes = sum(l.nbytes for l in jax.tree.leaves(self.state.caches))
         self._info = BackendInfo(
@@ -97,11 +176,18 @@ class PipelineBackend(InferenceBackend):
             cache_bytes_per_slot=cache_bytes // m,
             param_bytes=sum(l.nbytes
                             for l in jax.tree.leaves(self.stage_params)),
-            samples_in_backend=True)
+            samples_in_backend=True,
+            cache_layout=cache_layout,
+            block_size=block_size if cache_layout == "paged" else 0,
+            total_blocks=self.num_blocks,
+            free_blocks=self.num_blocks,
+            bytes_per_block=KV.block_pool_bytes_per_block(cfg, cache_dtype)
+            if cache_layout == "paged" else 0,
+            max_ctx_blocks=nbs if cache_layout == "paged" else 0)
 
     @property
     def info(self) -> BackendInfo:
-        return self._info
+        return self._live_info()
 
     # ------------------------------------------------------------------ #
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
@@ -116,10 +202,14 @@ class PipelineBackend(InferenceBackend):
         assert prompts.shape[2] == self.lanes
         with self.mesh:
             for i, slot in enumerate(slots):
+                if self.pager is not None:
+                    if self.pager.release(slot):  # blocks grow lazily per tick
+                        self._bt_dirty = True
                 self.state = self._reset_fn(self.state, jnp.asarray(slot))
                 self._prompts[slot] = prompts[i]
                 self._rounds[slot] = 0
                 self._gen_ready[slot] = 0
+                self._epoch[slot] = self._epoch.get(slot, 0) + 1
         return []
 
     def _feed_for(self, slot: int, feeds: Dict[int, int],
@@ -140,22 +230,43 @@ class PipelineBackend(InferenceBackend):
         slot = self._tick % self._m
         feed = self._feed_for(slot, feeds)
         valid = feed is not None
+        if valid and self._paged_exec:
+            # this tick writes position rounds[slot]; grow the slot's block
+            # table first, raising BEFORE any bookkeeping so the scheduler
+            # can preempt a victim and retry the very same tick
+            pos = self._rounds[slot]
+            need = self.pager.blocks_needed(slot, pos)
+            if need > self.pager.free_blocks:
+                raise PoolExhausted(needed=need,
+                                    free=self.pager.free_blocks)
+            if self.pager.ensure(slot, pos):
+                self._bt_dirty = True
+        if self._paged_exec and self._bt_dirty:
+            self._bt_dev = jnp.asarray(self.pager.table)
+            self._bt_dirty = False
         if valid:
-            self._inflight[self._tick] = (slot, self._rounds[slot])
+            self._inflight[self._tick] = (slot, self._rounds[slot],
+                                          self._epoch.get(slot, 0))
             self._rounds[slot] += 1
         else:
             feed = np.zeros(self.lanes, np.int32)
         with self.mesh:
-            self.state = self._tick_fn(self.stage_params, self.mask,
-                                       self.state, jnp.asarray(feed),
-                                       feed_valid=jnp.asarray(valid))
+            if self._paged_exec:
+                self.state = self._tick_fn(self.stage_params, self.mask,
+                                           self.state, jnp.asarray(feed),
+                                           jnp.asarray(valid), self._bt_dev)
+            else:
+                self.state = self._tick_fn(self.stage_params, self.mask,
+                                           self.state, jnp.asarray(feed),
+                                           feed_valid=jnp.asarray(valid))
         events: List[SlotEvent] = []
         done = self._inflight.pop(self._tick - (self.spec.n_stages - 1), None)
         self._tick += 1
         if done is None:
             return events
-        dslot, r = done
-        if dslot in self._prompts and r >= len(self._prompts[dslot]) - 1:
+        dslot, r, epoch = done
+        if dslot in self._prompts and epoch == self._epoch.get(dslot, 0) \
+                and r >= len(self._prompts[dslot]) - 1:
             tok = np.asarray(self.state.tokens_out[dslot])     # [lanes]
             self._gen_ready[dslot] += 1
             events.append(SlotEvent(
@@ -167,3 +278,14 @@ class PipelineBackend(InferenceBackend):
         self._prompts.pop(slot, None)
         self._rounds.pop(slot, None)
         self._gen_ready.pop(slot, None)
+        self._epoch[slot] = self._epoch.get(slot, 0) + 1
+        if self._paged_exec:
+            # a preempted slot may still be riding the ring: kill its
+            # validity so remaining stage passes cannot scribble on (freed,
+            # possibly reallocated) pool blocks.  Contiguous slots need no
+            # kill — only preemption frees mid-flight, and only the paged
+            # layout preempts; normal finishes have nothing in the ring.
+            with self.mesh:
+                self.state = self._kill_fn(self.state, jnp.asarray(slot))
+            if self.pager.release(slot):
+                self._bt_dirty = True

@@ -17,20 +17,32 @@ time, not text); timing comes from :class:`repro.core.simulator.StageCosts`.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Literal, Sequence
+from typing import Dict, List, Literal, Optional, Sequence
 
 import numpy as np
 
 from repro.core.simulator import SimResult, StageCosts
-from repro.runtime.base import BackendInfo, InferenceBackend, SlotEvent
+from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
+                                SlotEvent, SlotPager)
 
 
 class SimBackend(InferenceBackend):
-    """Event-driven timing simulation of a planned stage deployment."""
+    """Event-driven timing simulation of a planned stage deployment.
+
+    ``cache_layout="paged"`` adds *cost-model-only* paging: a
+    :class:`~repro.runtime.base.SlotPager` tracks per-slot block tables over
+    ``num_blocks`` logical blocks (no storage — the sim has no tensors), so
+    planner sweeps exercise the same overcommit admission / PoolExhausted /
+    preemption protocol the real backends serve.
+    """
 
     def __init__(self, costs: StageCosts, n_slots: int, mb_batch: int = 1,
                  schedule: Literal["nobubbles", "bubbles"] = "nobubbles",
-                 vocab_size: int = 32000, seed: int = 0):
+                 vocab_size: int = 32000, seed: int = 0,
+                 max_len: int = 1 << 30,
+                 cache_layout: str = "contiguous", block_size: int = 16,
+                 num_blocks: Optional[int] = None):
+        assert cache_layout in ("contiguous", "paged"), cache_layout
         self.costs = costs
         self.mb_batch = mb_batch
         self.schedule = schedule
@@ -40,16 +52,30 @@ class SimBackend(InferenceBackend):
         self._active = [False] * n_slots
         self._fed = [0] * n_slots               # feeds consumed per slot
         self._seen = [0] * n_slots              # tokens emitted per slot
+        self._plen = [0] * n_slots              # prompt tokens per slot
         self._rng = np.random.default_rng(seed)
         self._vocab = vocab_size
         self.makespan = 0.0
         self.tokens_done = 0
-        self._info = BackendInfo(n_slots=n_slots, max_len=1 << 30,
-                                 samples_in_backend=True)
+        self.pager: Optional[SlotPager] = None
+        if cache_layout == "paged":
+            nbs = -(-max_len // block_size) if max_len < (1 << 30) \
+                else (1 << 30)
+            if num_blocks is None:
+                num_blocks = n_slots * 8        # sweep-friendly default
+            self.pager = SlotPager(n_slots, num_blocks, block_size, nbs,
+                                   table_width=min(nbs, num_blocks))
+        self._info = BackendInfo(
+            n_slots=n_slots, max_len=max_len, samples_in_backend=True,
+            cache_layout=cache_layout,
+            block_size=block_size if self.pager else 0,
+            total_blocks=self.pager.total_blocks if self.pager else 0,
+            free_blocks=self.pager.total_blocks if self.pager else 0,
+            max_ctx_blocks=self.pager.max_ctx_blocks if self.pager else 0)
 
     @property
     def info(self) -> BackendInfo:
-        return self._info
+        return self._live_info()
 
     # ------------------------------------------------------------------ #
     def _run_through_stages(self, slot: int, prefill: bool) -> float:
@@ -75,11 +101,16 @@ class SimBackend(InferenceBackend):
 
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
                 ) -> List[SlotEvent]:
+        prompts = np.atleast_2d(np.asarray(prompts))
+        if self.pager is not None:
+            # atomic: on exhaustion nothing mutates
+            self.pager.realloc_wave(slots, prompts.shape[1])
         out = []
         for slot in slots:
             self._active[slot] = True
             self._fed[slot] = 0
             self._seen[slot] = 0
+            self._plen[slot] = prompts.shape[1]
             self._ready[slot] = self.makespan if self.schedule == "bubbles" \
                 else self._ready[slot]
             self._run_through_stages(slot, prefill=True)
@@ -90,6 +121,14 @@ class SimBackend(InferenceBackend):
         live = [s for s in sorted(feeds) if self._active[s]]
         if not live:
             return []
+        if self.pager is not None:
+            need = sum(self.pager.blocks_needed(
+                s, self._plen[s] + self._fed[s]) for s in live)
+            if need > self.pager.free_blocks:   # raise BEFORE any mutation
+                raise PoolExhausted(needed=need,
+                                    free=self.pager.free_blocks)
+            for s in live:
+                self.pager.ensure(s, self._plen[s] + self._fed[s])
         if self.schedule == "bubbles":          # Fig. 5(a) iteration barrier
             barrier = max(self._ready[s] for s in live)
             for s in live:
@@ -103,6 +142,8 @@ class SimBackend(InferenceBackend):
 
     def free_slot(self, slot: int) -> None:
         self._active[slot] = False
+        if self.pager is not None:
+            self.pager.release(slot)
 
     # ------------------------------------------------------------------ #
     def sim_result(self) -> SimResult:

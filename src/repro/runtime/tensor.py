@@ -5,21 +5,41 @@ Extracted from ``serving/engine.py`` and made *slot-granular*: the engine's
 single batch-wide KV cache (one shared ``pos`` / ``key_pos`` for every
 sequence) is replaced by per-slot caches, so a new request can be admitted
 into a free slot mid-flight without re-prefilling — or corrupting — the
-requests already decoding.  Decode vmaps the single-sequence decode step over
-the slot axis, which gives every slot its own position counter for free.
+requests already decoding.
+
+Two cache layouts, selectable via ``cache_layout``:
+
+- ``"contiguous"`` (default) — one worst-case ``max_len`` ring buffer per
+  slot; decode vmaps the single-sequence step over the slot axis, which
+  gives every slot its own position counter for free.
+- ``"paged"`` — slots map vLLM-style block tables into a shared pool of
+  ``num_blocks`` KV blocks (``block_size`` tokens each, one pool stripe per
+  attention layer; see ``models/kvcache.py``).  Decode runs the whole slot
+  batch in ONE pass with per-slot positions (no vmap — a shared pool cannot
+  be batched), gathering each slot's blocks through its table and
+  scattering the new token's k/v back.  Host-side allocation
+  (:class:`~repro.runtime.base.SlotPager`) grows tables as slots cross
+  block boundaries and raises :class:`~repro.runtime.base.PoolExhausted`
+  *before* mutating anything when the pool can't cover the next quantum —
+  the scheduler's cue to preempt and requeue.  Prefill runs the same
+  contiguous kernel over the admission wave (sized by the *bucketed prompt
+  length*, not ``max_len``), then scatters the wave's ring caches into the
+  pool by absolute position.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import kvcache as KV
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.runtime.base import BackendInfo, InferenceBackend, SlotEvent
+from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
+                                SlotEvent, SlotPager)
 from repro.sharding.rules import use_mesh
 
 PyTree = Any
@@ -35,49 +55,91 @@ def _flat_with_axes(caches: PyTree, axes: PyTree):
 
 
 class TensorBackend(InferenceBackend):
-    """pjit prefill + vmapped decode with per-slot KV caches."""
+    """pjit prefill + (vmapped contiguous | batched paged) decode."""
 
     def __init__(self, cfg: ModelConfig, params: PyTree, n_slots: int,
                  max_len: int, mesh=None, impl: str = "xla",
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, cache_layout: str = "contiguous",
+                 block_size: int = KV.DEFAULT_BLOCK_SIZE,
+                 num_blocks: Optional[int] = None):
+        assert cache_layout in ("contiguous", "paged"), cache_layout
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.mesh = mesh
         self.impl = impl
         self.cache_dtype = cache_dtype
+        self.cache_layout = cache_layout
         self._axes = T.cache_axes(cfg)
 
-        # per-slot cache storage: every leaf of a single-sequence cache,
-        # stacked along a leading slot axis
-        one = T.init_caches(cfg, 1, max_len, cache_dtype)
-        self.caches = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (n_slots,) + x.shape).copy(), one)
+        nbs = KV.max_ctx_blocks(cfg, max_len, block_size)
+        # attention-free models have nothing to page; keep the contiguous
+        # machinery and report an (empty) paged pool honestly
+        self._paged_exec = cache_layout == "paged" and nbs > 0
+        self.block_size = block_size
+        self.num_blocks = 0
+        self.pager: Optional[SlotPager] = None
+        if cache_layout == "paged":
+            self.num_blocks = num_blocks if num_blocks is not None \
+                else n_slots * nbs
+            self.pager = SlotPager(n_slots, self.num_blocks, block_size, nbs)
+
+        if self._paged_exec:
+            self.caches = T.init_paged_caches(cfg, n_slots, max_len,
+                                              self.num_blocks, block_size,
+                                              cache_dtype)
+        else:
+            # per-slot cache storage: every leaf of a single-sequence cache,
+            # stacked along a leading slot axis
+            one = T.init_caches(cfg, 1, max_len, cache_dtype)
+            self.caches = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_slots,) + x.shape).copy(),
+                one)
 
         self._prefill_fn = jax.jit(functools.partial(
             T.forward, cfg, mode="prefill", impl=impl))
 
-        def _decode(params, tokens, caches):
-            logits, new = jax.vmap(
-                lambda tok, c: T.decode_step(cfg, params, tok[None], c,
-                                             impl=impl),
-                in_axes=(0, 0))(tokens, caches)
-            return logits[:, 0], new
+        if self._paged_exec:
+            def _decode(params, tokens, caches, write_mask):
+                return T.decode_step(cfg, params, tokens, caches, impl=impl,
+                                     write_mask=write_mask)
+            self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+            self._scatter_fn = jax.jit(self._scatter_paged,
+                                       donate_argnums=(0,))
+        else:
+            def _decode(params, tokens, caches):
+                logits, new = jax.vmap(
+                    lambda tok, c: T.decode_step(cfg, params, tok[None], c,
+                                                 impl=impl),
+                    in_axes=(0, 0))(tokens, caches)
+                return logits[:, 0], new
+            self._decode_fn = jax.jit(_decode)
+            self._scatter_fn = jax.jit(self._scatter, donate_argnums=(0,))
 
-        self._decode_fn = jax.jit(_decode)
-        self._scatter_fn = jax.jit(self._scatter, donate_argnums=(0,))
+        # host mirrors for paged allocation (decode position per slot)
+        self._pos = np.zeros(n_slots, np.int64)
+        self._active = np.zeros(n_slots, bool)
 
         cache_bytes = sum(l.nbytes for l in jax.tree.leaves(self.caches))
         self._info = BackendInfo(
             n_slots=n_slots, max_len=max_len,
             cache_bytes_per_slot=cache_bytes // n_slots,
             param_bytes=sum(l.nbytes for l in jax.tree.leaves(params)),
-            samples_in_backend=False)
+            samples_in_backend=False,
+            cache_layout=cache_layout,
+            block_size=block_size if cache_layout == "paged" else 0,
+            total_blocks=self.num_blocks,
+            free_blocks=self.num_blocks,
+            bytes_per_block=KV.block_pool_bytes_per_block(cfg, cache_dtype)
+            if cache_layout == "paged" else 0,
+            max_ctx_blocks=nbs if cache_layout == "paged" else 0)
 
     @property
     def info(self) -> BackendInfo:
-        return self._info
+        return self._live_info()
 
+    # ------------------------------------------------------------------ #
+    # contiguous scatter (unchanged from the pre-paging backend)
     # ------------------------------------------------------------------ #
     def _scatter(self, storage: PyTree, new: PyTree, idx: jax.Array) -> PyTree:
         """Write batch-k prefill caches into per-slot storage at ``idx``.
@@ -100,11 +162,118 @@ class TensorBackend(InferenceBackend):
             out.append(leaf_s.at[idx].set(per.astype(leaf_s.dtype)))
         return jax.tree.unflatten(treedef, out)
 
+    # ------------------------------------------------------------------ #
+    # paged scatter: dense ring prefill caches -> block pool
+    # ------------------------------------------------------------------ #
+    def _scatter_one_paged(self, spec, paged: Dict, dense: Dict,
+                           slots: jax.Array, bt_rows: jax.Array) -> Dict:
+        """Scatter one attention entry's wave prefill (ring layout, any
+        cache length) into the pool by absolute position.  All leaves carry
+        a leading layer axis (callers expand tail entries to L=1)."""
+        c_pad = paged["key_pos"].shape[-1]
+        bs = paged["k_pool"].shape[2]
+        scratch = paged["k_pool"].shape[1] - 1
+        kp0 = dense["key_pos"][0]                       # [C_d] (layer-shared)
+        valid = kp0 >= 0
+        ring = jnp.where(valid, kp0 % c_pad, 0)
+        blk, off = ring // bs, ring % bs
+        phys = bt_rows[:, blk]                          # [W, C_d]
+        tgt = jnp.where(valid[None, :] & (phys >= 0), phys, scratch)
+
+        out = dict(paged)
+        pairs = [("k_pool", "k"), ("v_pool", "v")]
+        if self.cfg.kv_dtype == "int8":
+            pairs += [("k_scale_pool", "k_scale"), ("v_scale_pool", "v_scale")]
+        for pool_key, dense_key in pairs:
+            pool = paged[pool_key]                      # [L, NB+1, bs, ...]
+            vals = dense[dense_key].astype(pool.dtype)  # [L, W, C_d, ...]
+            out[pool_key] = pool.at[:, tgt, off].set(vals)
+
+        # per-slot ring view: key_pos row rebuilt at the paged ring length
+        safe = jnp.where(valid, ring, c_pad)
+        row = jnp.full((c_pad + 1,), -1, jnp.int32).at[safe].set(
+            jnp.where(valid, kp0, -1))[:c_pad]
+        out["key_pos"] = paged["key_pos"].at[:, slots].set(row[None, None, :])
+        out["pos"] = paged["pos"].at[:, slots].set(dense["pos"][:, None])
+        out["bt"] = paged["bt"].at[:, slots].set(bt_rows[None])
+        return out
+
+    def _scatter_paged(self, storage: PyTree, new: PyTree, idx: jax.Array,
+                       bt_rows: jax.Array) -> PyTree:
+        """Write a wave's dense prefill caches into the paged storage."""
+        def walk(group: str, specs):
+            src = new.get(group)
+            dst = storage.get(group)
+            if dst is None:
+                return None
+            out = {}
+            for key, spec in specs:
+                d, s = dst[key], src[key]
+                if spec.kind == "attn":
+                    if group == "tail":            # expand to L=1, squeeze
+                        d1 = jax.tree.map(lambda x: x[None], d)
+                        s1 = jax.tree.map(lambda x: x[None], s)
+                        r = self._scatter_one_paged(spec, d1, s1, idx,
+                                                    bt_rows)
+                        out[key] = jax.tree.map(lambda x: x[0], r)
+                    else:
+                        out[key] = self._scatter_one_paged(spec, d, s, idx,
+                                                           bt_rows)
+                else:
+                    # dense per-slot state: batch leaves land at the wave's
+                    # slot rows; "pos" is batch-free in the dense layout but
+                    # per-slot [B] in the paged one
+                    if group == "stack":
+                        e = {k: d[k].at[:, idx].set(s[k].astype(d[k].dtype))
+                             for k in d if k != "pos"}
+                        e["pos"] = d["pos"].at[:, idx].set(s["pos"][:, None])
+                    else:
+                        e = {k: d[k].at[idx].set(s[k].astype(d[k].dtype))
+                             for k in d if k != "pos"}
+                        e["pos"] = d["pos"].at[idx].set(s["pos"])
+                    out[key] = e
+            return out
+
+        result: Dict[str, Any] = {}
+        if self.cfg.n_full_periods > 0:
+            result["stack"] = walk(
+                "stack", [(f"p{p}", s) for p, s in enumerate(self.cfg.pattern)])
+        if self.cfg.tail:
+            result["tail"] = walk(
+                "tail", [(f"t{t}", s) for t, s in enumerate(self.cfg.tail)])
+        return result
+
+    def _push_tables(self) -> None:
+        """Refresh the device block-table leaves from the host pager."""
+        table = jnp.asarray(self.pager.table)
+
+        def fix(entry, stacked):
+            if not KV.is_paged_attn_cache(entry):
+                return entry
+            e = dict(entry)
+            e["bt"] = jnp.broadcast_to(
+                table, entry["bt"].shape) if stacked else table
+            return e
+
+        caches = dict(self.caches)
+        if "stack" in caches:
+            caches["stack"] = {k: fix(v, True)
+                               for k, v in caches["stack"].items()}
+        if "tail" in caches:
+            caches["tail"] = {k: fix(v, False)
+                              for k, v in caches["tail"].items()}
+        self.caches = caches
+
+    # ------------------------------------------------------------------ #
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
                 ) -> List[SlotEvent]:
         prompts = np.atleast_2d(np.asarray(prompts, np.int32))
         k = prompts.shape[0]
         assert len(slots) == k
+        if self._paged_exec:
+            # atomic: on exhaustion nothing mutates and the scheduler can
+            # retry the wave after preempting
+            self.pager.realloc_wave(slots, prompts.shape[1])
         # pad the wave to the full slot width by repeating the first entry
         # (duplicate scatter indices write identical values), so prefill and
         # scatter compile once instead of per admission-wave size
@@ -112,13 +281,29 @@ class TensorBackend(InferenceBackend):
         prompts_p = np.concatenate(
             [prompts, np.repeat(prompts[:1], pad, axis=0)]) if pad else prompts
         slots_p = list(slots) + [slots[0]] * pad
-        fresh = T.init_caches(self.cfg, self.n_slots, self.max_len,
-                              self.cache_dtype)
-        with use_mesh(self.mesh):
-            logits, new_caches, _ = self._prefill_fn(
-                self.params, jnp.asarray(prompts_p), caches=fresh)
-            self.caches = self._scatter_fn(self.caches, new_caches,
-                                           jnp.asarray(slots_p, jnp.int32))
+        idx = jnp.asarray(slots_p, jnp.int32)
+        if self._paged_exec:
+            # dense scratch caches sized by the bucketed prompt length (not
+            # max_len): transient prefill workspace stays proportional to
+            # the wave, the pool holds the persistent state
+            fresh = T.init_caches(self.cfg, self.n_slots, prompts.shape[1],
+                                  self.cache_dtype)
+            bt_rows = jnp.asarray(self.pager.table[np.asarray(slots_p)])
+            with use_mesh(self.mesh):
+                logits, new_caches, _ = self._prefill_fn(
+                    self.params, jnp.asarray(prompts_p), caches=fresh)
+                self.caches = self._scatter_fn(self.caches, new_caches, idx,
+                                               bt_rows)
+            for s in slots:
+                self._pos[s] = prompts.shape[1]
+                self._active[s] = True
+        else:
+            fresh = T.init_caches(self.cfg, self.n_slots, self.max_len,
+                                  self.cache_dtype)
+            with use_mesh(self.mesh):
+                logits, new_caches, _ = self._prefill_fn(
+                    self.params, jnp.asarray(prompts_p), caches=fresh)
+                self.caches = self._scatter_fn(self.caches, new_caches, idx)
         last = np.asarray(logits[:, -1], np.float32)
         return [SlotEvent(slot=s, logits=last[i]) for i, s in enumerate(slots)]
 
@@ -128,11 +313,36 @@ class TensorBackend(InferenceBackend):
         tokens = np.zeros(self.n_slots, np.int32)
         for s, t in feeds.items():
             tokens[s] = t
-        with use_mesh(self.mesh):
-            logits, self.caches = self._decode_fn(
-                self.params, jnp.asarray(tokens), self.caches)
+        if self._paged_exec:
+            live = [s for s in sorted(feeds) if self._active[s]]
+            need = sum(self.pager.blocks_needed(s, int(self._pos[s]))
+                       for s in live)
+            if need > self.pager.free_blocks:     # raise BEFORE any mutation
+                raise PoolExhausted(needed=need,
+                                    free=self.pager.free_blocks)
+            changed = False
+            for s in live:
+                changed |= self.pager.ensure(s, int(self._pos[s]))
+            if changed:
+                self._push_tables()
+            mask = np.zeros(self.n_slots, bool)
+            mask[live] = True
+            with use_mesh(self.mesh):
+                logits, self.caches = self._decode_fn(
+                    self.params, jnp.asarray(tokens), self.caches,
+                    jnp.asarray(mask))
+            for s in live:
+                self._pos[s] += 1
+        else:
+            with use_mesh(self.mesh):
+                logits, self.caches = self._decode_fn(
+                    self.params, jnp.asarray(tokens), self.caches)
         logits = np.asarray(logits, np.float32)
         return [SlotEvent(slot=s, logits=logits[s]) for s in sorted(feeds)]
 
     def free_slot(self, slot: int) -> None:
-        pass        # storage is fully overwritten on the next prefill
+        # contiguous storage is fully overwritten on the next prefill; the
+        # paged pool returns the slot's blocks to the free list immediately
+        self._active[slot] = False
+        if self.pager is not None:
+            self.pager.release(slot)

@@ -82,6 +82,8 @@ class LLM:
                   lanes: int = 1, max_len: int = 256, cache_dtype=None,
                   schedule: str = "nobubbles", impl: str = "xla",
                   seed: int = 0, min_bucket: int = 8, pad_id: int = 0,
+                  cache_layout: str = "contiguous", block_size: int = 16,
+                  num_blocks: Optional[int] = None,
                   ) -> "LLM":
         """Plan → backend → serving in one call (the paper's Fig. 3 flow).
 
@@ -91,6 +93,11 @@ class LLM:
         ``"tensor"`` (single-engine pjit), or ``"sim"`` (cost model — no
         ``params`` needed).  The planned ``Deployment`` is kept on
         ``llm.deployment`` for inspection.
+
+        ``cache_layout="paged"`` serves over a shared KV block pool
+        (``num_blocks`` × ``block_size``-token blocks; sized for no
+        overcommit when ``num_blocks`` is omitted) with block-budget
+        admission and preempt/resume overcommit — see docs/runtime.md.
         """
         from repro.core.planner import plan_deployment
         from repro.core.profile import Workload
@@ -101,7 +108,10 @@ class LLM:
                                   workload=workload, mesh=mesh,
                                   n_slots=n_slots, lanes=lanes,
                                   max_len=max_len, cache_dtype=cache_dtype,
-                                  schedule=schedule, impl=impl)
+                                  schedule=schedule, impl=impl,
+                                  cache_layout=cache_layout,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks)
         llm = cls(backend, seed=seed, min_bucket=min_bucket, pad_id=pad_id)
         llm.deployment = dep
         return llm

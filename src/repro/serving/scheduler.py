@@ -41,7 +41,7 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.runtime.base import InferenceBackend, SlotEvent
+from repro.runtime.base import InferenceBackend, PoolExhausted, SlotEvent
 from repro.serving.types import Request, TokenEvent
 
 
@@ -53,6 +53,8 @@ class SchedulerStats:
     slot_busy_steps: int = 0
     slot_total_steps: int = 0
     exhausted: bool = False             # run() hit max_steps with work left
+    preemptions: int = 0                # pool-exhaustion evictions (paged)
+    resumes: int = 0                    # preempted requests re-admitted
     prefill_shapes: Dict[int, int] = field(default_factory=dict)
     # ^ bucketed prompt length -> number of admission waves at that shape
 
@@ -64,6 +66,7 @@ class SchedulerStats:
         return (f"SchedulerStats(served={self.served}, "
                 f"decode_steps={self.decode_steps}, "
                 f"prefills={self.prefills}, "
+                f"preemptions={self.preemptions}, "
                 f"utilization={self.utilization:.3f})")
 
 
@@ -109,11 +112,16 @@ class ContinuousBatcher:
 
     def __init__(self, backend, seed: int = 0, *, min_bucket: int = 8,
                  pad_id: int = 0,
-                 on_token: Optional[Callable[[TokenEvent], None]] = None):
+                 on_token: Optional[Callable[[TokenEvent], None]] = None,
+                 reserve_blocks: Optional[int] = None):
         self.backend: InferenceBackend = _as_backend(backend)
         self.min_bucket = min_bucket
         self.pad_id = pad_id
         self.on_token = on_token
+        #: paged admission head-room: keep this many free blocks when
+        #: admitting so running requests can still grow.  None = dynamic
+        #: (one block per currently-running request).
+        self.reserve_blocks = reserve_blocks
         self.queue: Deque[Request] = deque()
         self._arrivals: List[Tuple[int, int, Request]] = []   # (step, n, req)
         self._n_submitted = 0
@@ -128,6 +136,11 @@ class ContinuousBatcher:
         self._feeds: Dict[int, int] = {}
         self.step_no = 0
         self._uids: Set[int] = set()
+        # preemption/resume bookkeeping (paged overcommit)
+        self._resume: Dict[int, np.ndarray] = {}   # uid -> exact re-prefill
+        self._bucket_len: Dict[int, int] = {}      # uid -> original bucket
+        self._admit_seq: Dict[int, int] = {}       # uid -> admission order
+        self._n_admitted = 0
 
     # ------------------------------------------------------------------ #
     # submission
@@ -165,6 +178,18 @@ class ContinuousBatcher:
                 f"backend's cache (max_len {max_len}); lower max_tokens to "
                 f"<= {max_len - self._bucket(plen) + 1} or serve with a "
                 f"larger max_len")
+        info = self.backend.info
+        if info.paged:
+            # worst case this one request can ever hold (the final sampled
+            # token is never written back); a pool smaller than that
+            # deadlocks — preempting everyone else still can't fit it
+            worst = info.blocks_for_len(
+                min(self._bucket(plen) + req.params.max_tokens - 1, max_len))
+            if worst > info.total_blocks:
+                raise ValueError(
+                    f"request {req.uid}: needs up to {worst} KV blocks but "
+                    f"the pool has only {info.total_blocks}; shrink "
+                    f"max_tokens or serve with more blocks")
         if req.params.temperature > 0.0 and \
                 self.backend.info.samples_in_backend:
             raise ValueError(
@@ -237,21 +262,68 @@ class ContinuousBatcher:
             self._uids.discard(uid)
         return req
 
-    def _next_wave(self) -> Tuple[int, List[Request]]:
+    def _next_wave(self, cap: Optional[int] = None,
+                   ) -> Tuple[int, List[Request]]:
         """Pull the next admission wave: FIFO head plus every queued request
-        sharing its length bucket, up to the free-slot capacity."""
-        cap = len(self._free)
+        sharing its length bucket, up to the free-slot capacity (or the
+        tighter paged block-budget ``cap``).  Resumed requests never join a
+        wave here — the caller admits them singleton with an exact shape."""
+        cap = len(self._free) if cap is None else cap
         blen = self._bucket(len(self.queue[0].prompt))
         wave: List[Request] = []
         keep: Deque[Request] = deque()
         while self.queue:
             r = self.queue.popleft()
-            if len(wave) < cap and self._bucket(len(r.prompt)) == blen:
+            if len(wave) < cap and r.uid not in self._resume and \
+                    self._bucket(len(r.prompt)) == blen:
                 wave.append(r)
             else:
                 keep.append(r)
         self.queue = keep
         return blen, wave
+
+    # ------------------------------------------------------------------ #
+    # paged overcommit: preemption + recompute-on-resume
+    # ------------------------------------------------------------------ #
+    def _preempt(self, slot: int) -> None:
+        """Evict the request in ``slot``: free its blocks and requeue it at
+        the queue head with an exact re-prefill prefix — the *original
+        padded prompt layout* plus everything generated so far, so the
+        recomputed KV (and every later token) is identical to an
+        uninterrupted run."""
+        req = self._slot_req.pop(slot)
+        self.backend.free_slot(slot)
+        self._feeds.pop(slot, None)
+        self._free.append(slot)
+        blen = self._bucket_len[req.uid]
+        prefix = np.full(blen + len(req.generated), self.pad_id, np.int32)
+        prefix[blen - len(req.prompt):blen] = req.prompt
+        prefix[blen:] = req.generated
+        self._resume[req.uid] = prefix
+        self.queue.appendleft(req)
+        req.timing.preemptions += 1
+        self.stats.preemptions += 1
+
+    def _preempt_youngest(self) -> bool:
+        """Preempt the most recently admitted running request.  Returns
+        False when preemption cannot help (zero or one request running)."""
+        if len(self._slot_req) <= 1:
+            return False
+        slot = max(self._slot_req,
+                   key=lambda s: self._admit_seq[self._slot_req[s].uid])
+        self._preempt(slot)
+        return True
+
+    def _admit_block_budget(self) -> Optional[int]:
+        """Free blocks available for admission this step (None when the
+        backend is not paged): live free count minus a reserve so running
+        requests keep room to grow."""
+        info = self.backend.info
+        if not info.paged:
+            return None
+        reserve = self.reserve_blocks if self.reserve_blocks is not None \
+            else len(self._slot_req)
+        return max(info.free_blocks - reserve, 0)
 
     def _handle(self, events: List[SlotEvent], out: List[TokenEvent]):
         for ev in events:
@@ -276,6 +348,8 @@ class ContinuousBatcher:
                 self.done[req.uid] = req
                 self.stats.served += 1
                 self._keys.pop(req.uid, None)
+                self._bucket_len.pop(req.uid, None)
+                self._admit_seq.pop(req.uid, None)
                 self.backend.free_slot(ev.slot)
                 del self._slot_req[ev.slot]
                 self._feeds.pop(ev.slot, None)
@@ -295,7 +369,15 @@ class ContinuousBatcher:
         """Advance one scheduler quantum: release staged arrivals, admit
         bucketed waves into free slots, run one backend decode quantum.
         Returns the tokens produced this step (possibly none).  No-op when
-        fully idle."""
+        fully idle.
+
+        Over a paged backend, admission is *block-budget* gated (free
+        blocks minus a reserve must cover each wave's prompts) and may
+        overcommit relative to worst-case slot demand; if the pool later
+        runs dry mid-decode the backend raises
+        :class:`~repro.runtime.base.PoolExhausted` and the youngest running
+        request is preempted, requeued, and recomputed on resume.
+        """
         out: List[TokenEvent] = []
         while self._arrivals and self._arrivals[0][0] <= self.step_no:
             self.queue.append(heapq.heappop(self._arrivals)[2])
@@ -303,25 +385,81 @@ class ContinuousBatcher:
             return out
         # admission: fill free slots without draining the running batch;
         # one prefill call per length bucket keeps XLA shapes bounded
+        info = self.backend.info
+        budget = self._admit_block_budget()
         while self.queue and self._free:
-            blen, wave = self._next_wave()
+            head = self.queue[0]
+            if head.uid in self._resume:
+                # resumed requests re-prefill their exact padded prefix
+                # (prompt layout + generated tokens) as a singleton wave
+                plen = len(self._resume[head.uid])
+                need = info.blocks_for_len(plen)
+                if budget is not None and need > budget:
+                    break
+                req = self.queue.popleft()
+                wave, blen = [req], plen
+                padded = self._resume.pop(req.uid)[None, :]
+                resumed = True
+            else:
+                resumed = False
+                blen = self._bucket(len(head.prompt))
+                need_each = info.blocks_for_len(blen)
+                cap = len(self._free)
+                if budget is not None:
+                    if need_each > budget:
+                        break
+                    if need_each:
+                        cap = min(cap, budget // need_each)
+                blen, wave = self._next_wave(cap)
+                if not wave:                    # defensive: never expected
+                    break
+                need = need_each * len(wave)
+                padded = np.full((len(wave), blen), self.pad_id, np.int32)
+                for i, req in enumerate(wave):
+                    padded[i, blen - len(req.prompt):] = req.prompt
             slots = [self._free.popleft() for _ in wave]
+            try:
+                events = self.backend.prefill(slots, padded)
+            except PoolExhausted:
+                # the lazy-allocating pipeline can reach here despite the
+                # budget gate; put everything back and let decode drain
+                for s in reversed(slots):
+                    self._free.appendleft(s)
+                for r in reversed(wave):
+                    self.queue.appendleft(r)
+                if len(wave) == 1 and wave[0].timing.preemptions and \
+                        wave[0].uid not in self._resume:
+                    self._resume[wave[0].uid] = padded[0]   # singleton resume
+                break
             now = time.perf_counter()
-            padded = np.full((len(wave), blen), self.pad_id, np.int32)
-            for i, (slot, req) in enumerate(zip(slots, wave)):
+            for slot, req in zip(slots, wave):
                 self._slot_req[slot] = req
                 req.timing.admit_step = self.step_no
                 req.timing.admitted_s = now
-                padded[i, blen - len(req.prompt):] = req.prompt  # right-align
+                self._bucket_len.setdefault(req.uid, blen)
+                self._n_admitted += 1
+                self._admit_seq[req.uid] = self._n_admitted
             self.stats.prefills += 1
+            if resumed:
+                self.stats.resumes += 1
             self.stats.prefill_shapes[blen] = \
                 self.stats.prefill_shapes.get(blen, 0) + 1
-            self._handle(self.backend.prefill(slots, padded), out)
+            if budget is not None:
+                budget = max(budget - need, 0)
+            self._handle(events, out)
         if self._slot_req:
             self.stats.decode_steps += 1
             self.stats.slot_total_steps += self.backend.n_slots
             self.stats.slot_busy_steps += len(self._slot_req)
-            self._handle(self.backend.decode_step(self._feeds), out)
+            while True:
+                try:
+                    events = self.backend.decode_step(self._feeds)
+                    break
+                except PoolExhausted:
+                    if not self._preempt_youngest():
+                        raise   # a lone request outgrowing the pool is a
+                                # sizing bug submit() should have rejected
+            self._handle(events, out)
         self.step_no += 1
         return out
 

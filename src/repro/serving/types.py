@@ -68,6 +68,10 @@ class RequestTiming:
     admit_step: Optional[int] = None
     first_token_step: Optional[int] = None
     finish_step: Optional[int] = None
+    #: times this request was evicted for KV-pool pressure (paged
+    #: overcommit) and later recomputed on resume; generated tokens are
+    #: preserved across preemptions, so outputs are unaffected
+    preemptions: int = 0
 
     @property
     def queue_s(self) -> Optional[float]:

@@ -1,0 +1,245 @@
+"""Backend-conformance suite: one parametrized contract check run against
+every ``InferenceBackend`` × cache layout combination.
+
+The contract under test (``runtime/base.py`` + docs/runtime.md):
+
+- slot lifecycle: prefill into free slots, recycle released slots, tolerate
+  quanta between free and re-prefill;
+- ``BackendInfo`` accounting invariants (contiguous and paged);
+- greedy decode parity: paged and contiguous layouts produce token-identical
+  outputs for identical prompts/seeds;
+- determinism under slot permutation: a request's tokens do not depend on
+  which slot serves it or who shares the batch.
+
+Real-model backends run a tiny qwen3 on CPU; multi-device pipeline variants
+re-exec in a subprocess with fake XLA devices (same pattern as
+test_runtime.py).  SimBackend rows run jax-free.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MAX_LEN = 32
+GEN = 5
+
+
+def run_subprocess(body: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# --------------------------------------------------------------------------- #
+# backend builders (lazy: jax only when a real backend is requested)
+# --------------------------------------------------------------------------- #
+
+def _tiny_cfg_params():
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_backend(kind: str, layout: str, n_slots: int = 3):
+    if kind == "tensor":
+        from repro.runtime import TensorBackend
+        cfg, params = _tiny_cfg_params()
+        return cfg, TensorBackend(cfg, params, n_slots=n_slots,
+                                  max_len=MAX_LEN, cache_layout=layout)
+    if kind == "sim":
+        from repro.core.simulator import StageCosts
+        from repro.runtime import SimBackend
+        costs = StageCosts(prefill=np.array([.01, .02]),
+                           decode=np.array([.001, .002]),
+                           comm_prefill=np.array([.001]),
+                           comm_decode=np.array([.0001]),
+                           return_comm=.0001)
+        return None, SimBackend(costs, n_slots=n_slots, max_len=MAX_LEN,
+                                cache_layout=layout,
+                                num_blocks=n_slots * (MAX_LEN // 16))
+    raise ValueError(kind)
+
+
+def serve_prompts(backend, prompts, uids=None, gen=GEN, seed=0):
+    """Greedy-serve prompts; returns {uid: tokens}."""
+    from repro.serving import ContinuousBatcher, Request, SamplingParams
+    b = ContinuousBatcher(backend, seed=seed)
+    uids = uids if uids is not None else list(range(len(prompts)))
+    for uid, p in zip(uids, prompts):
+        b.submit(Request(np.asarray(p, np.int32),
+                         SamplingParams(max_tokens=gen), uid=uid))
+    done = b.run()
+    assert sorted(done) == sorted(uids)
+    return {u: done[u].generated for u in uids}
+
+
+KINDS = [("tensor", "contiguous"), ("tensor", "paged"),
+         ("sim", "contiguous"), ("sim", "paged")]
+
+
+# --------------------------------------------------------------------------- #
+# slot lifecycle: acquire / release / recycle
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kind,layout", KINDS)
+def test_slot_acquire_release_recycle(kind, layout):
+    """More requests than slots: every slot is recycled at least once, every
+    request finishes, and (paged) all blocks return to the pool."""
+    cfg, backend = make_backend(kind, layout, n_slots=2)
+    vocab = cfg.vocab_size if cfg else 100
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, vocab, n).astype(np.int32)
+               for n in (4, 6, 3, 5, 7)]
+    outs = serve_prompts(backend, prompts)
+    assert all(len(t) == GEN for t in outs.values())
+    info = backend.info
+    if info.paged:
+        assert info.free_blocks == info.total_blocks, \
+            "released slots must return every block to the pool"
+
+
+@pytest.mark.parametrize("kind,layout", KINDS)
+def test_free_slot_tolerates_quanta_before_reuse(kind, layout):
+    """The protocol requires backends to tolerate decode quanta between
+    free_slot and the next prefill of that slot."""
+    cfg, backend = make_backend(kind, layout, n_slots=2)
+    vocab = cfg.vocab_size if cfg else 100
+    rng = np.random.default_rng(1)
+    evs = backend.prefill([0, 1], rng.integers(0, vocab, (2, 4)).astype(np.int32))
+    feeds = {0: 1, 1: 2}
+    for _ in range(4):
+        for e in backend.decode_step(feeds):
+            tok = e.token if e.token is not None else int(np.argmax(e.logits))
+            feeds[e.slot] = int(tok)
+    backend.free_slot(0)
+    del feeds[0]
+    for _ in range(3):                      # quanta with a freed slot
+        backend.decode_step(feeds)
+    # recycling the freed slot still works
+    backend.prefill([0], rng.integers(0, vocab, (1, 4)).astype(np.int32))
+
+
+# --------------------------------------------------------------------------- #
+# BackendInfo accounting invariants
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kind,layout", KINDS)
+def test_backend_info_invariants(kind, layout):
+    cfg, backend = make_backend(kind, layout)
+    info = backend.info
+    assert info.n_slots == 3
+    assert info.cache_bytes == info.n_slots * info.cache_bytes_per_slot
+    assert info.paged == (layout == "paged")
+    if layout == "paged":
+        assert info.block_size > 0 and info.total_blocks > 0
+        assert 0 <= info.free_blocks <= info.total_blocks
+        assert info.blocks_per_token == pytest.approx(1 / info.block_size)
+        # blocks_for_len: ceil-div, clamped at max_ctx_blocks
+        assert info.blocks_for_len(1) == 1
+        assert info.blocks_for_len(info.block_size) == 1
+        assert info.blocks_for_len(info.block_size + 1) == 2
+        assert info.blocks_for_len(10 ** 9) == info.max_ctx_blocks
+    else:
+        assert info.block_size == 0 and info.total_blocks == 0
+        assert info.blocks_for_len(100) == 0
+
+
+def test_paged_info_not_worst_case():
+    """Acceptance: with an overcommitted pool, the paged layout's
+    cache_bytes_per_slot is the provisioned share — strictly below the
+    contiguous worst-case max_len figure."""
+    from repro.runtime import TensorBackend
+    cfg, params = _tiny_cfg_params()
+    contig = TensorBackend(cfg, params, n_slots=4, max_len=MAX_LEN)
+    half = 4 * (MAX_LEN // 16) // 2
+    paged = TensorBackend(cfg, params, n_slots=4, max_len=MAX_LEN,
+                          cache_layout="paged", num_blocks=half)
+    assert paged.info.cache_bytes_per_slot < contig.info.cache_bytes_per_slot
+    # and the dominant pool storage scales with blocks, not slots*max_len
+    assert paged.info.bytes_per_block * paged.info.total_blocks < \
+        contig.info.cache_bytes
+
+
+# --------------------------------------------------------------------------- #
+# greedy decode parity: paged <-> contiguous (acceptance criterion)
+# --------------------------------------------------------------------------- #
+
+def test_tensor_paged_contiguous_parity():
+    cfg, backend_c = make_backend("tensor", "contiguous")
+    _, backend_p = make_backend("tensor", "paged")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 8, 5, 6, 4)]
+    a = serve_prompts(backend_c, prompts)
+    b = serve_prompts(backend_p, prompts)
+    assert a == b
+    assert len(np.unique([t for ts in a.values() for t in ts])) > 2, \
+        "degenerate reference"
+
+
+def test_pipeline_paged_contiguous_parity():
+    """Acceptance: paged and contiguous layouts match token-for-token on the
+    no-bubbles PipelineBackend too (subprocess: needs multiple devices)."""
+    run_subprocess("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core import pipeline as PL
+from repro.models import transformer as T
+from repro.runtime import PipelineBackend, TensorBackend
+from repro.serving import ContinuousBatcher, Request, SamplingParams
+
+cfg = get_config("qwen3-0.6b").reduced(n_layers=4)
+params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+spec = PL.even_pipeline_spec(cfg, 2)
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, cfg.vocab_size, (5, 6)).astype(np.int32)
+
+def serve(be):
+    b = ContinuousBatcher(be)
+    for uid in range(5):
+        b.submit(Request(prompts[uid], SamplingParams(max_tokens=5), uid=uid))
+    done = b.run()
+    return [done[u].generated for u in range(5)]
+
+tens = serve(TensorBackend(cfg, params, n_slots=3, max_len=32))
+contig = serve(PipelineBackend(cfg, params, spec, mesh, n_slots=3,
+                               max_len=32))
+paged = serve(PipelineBackend(cfg, params, spec, mesh, n_slots=3, max_len=32,
+                              cache_layout="paged"))
+assert contig == paged, (contig, paged)
+assert tens == paged, (tens, paged)     # and across backends
+print("pipeline parity OK")
+""")
+
+
+# --------------------------------------------------------------------------- #
+# determinism under slot permutation
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_tensor_determinism_under_slot_permutation(layout):
+    """A request's greedy tokens must not depend on submission order, slot
+    assignment, or batch companions (same-bucket prompts so padding is
+    identical across runs)."""
+    cfg, backend_a = make_backend("tensor", layout)
+    rng = np.random.default_rng(4)
+    prompts = {uid: rng.integers(0, cfg.vocab_size, 5 + uid % 3
+                                 ).astype(np.int32) for uid in range(5)}
+    a = serve_prompts(backend_a, [prompts[u] for u in range(5)],
+                      uids=list(range(5)))
+    _, backend_b = make_backend("tensor", layout, n_slots=2)  # other layout
+    order = [3, 1, 4, 0, 2]
+    b = serve_prompts(backend_b, [prompts[u] for u in order], uids=order)
+    assert a == b
