@@ -7,7 +7,9 @@ streams HBM->VMEM block by block — the kernel is memory-bound by design and
 its roofline is the cache-read term.
 
 Slot validity/window masking is precomputed by the wrapper into a boolean
-``mask [1, C]`` (ring buffers make validity position- not index-monotonic).
+``mask [1, C]`` — or ``[B, C]`` when rows decode at their own positions
+(masked length-bucketed prefill) — since ring buffers make validity
+position- not index-monotonic.
 """
 from __future__ import annotations
 
@@ -64,7 +66,9 @@ def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
                          mask: jax.Array, *, softcap: Optional[float] = None,
                          block_c: int = 512, interpret: bool = False,
                          ) -> jax.Array:
-    """q [B,H,D]; k/v [B,C,KH,D]; mask [1,C] bool (True = attend).
+    """q [B,H,D]; k/v [B,C,KH,D]; mask [1,C] or [B,C] bool (True = attend;
+    a [B,C] mask carries per-row validity/window, e.g. per-row decode
+    positions after a masked length-bucketed prefill).
 
     Returns [B,H,D].  C must be a multiple of ``block_c`` (wrapper pads with
     masked slots).
@@ -72,13 +76,18 @@ def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
     b, h, d = q.shape
     c, kh = k.shape[1], k.shape[2]
     assert c % block_c == 0, (c, block_c)
+    assert mask.shape[0] in (1, b), mask.shape
     scale = 1.0 / math.sqrt(d)
     grid = (b, h, c // block_c)
+    shared_mask = mask.shape[0] == 1
 
     q_spec = pl.BlockSpec((1, 1, d), lambda b_, h_, ic: (b_, h_, 0))
     kv_spec = pl.BlockSpec((1, block_c, 1, d),
                            lambda b_, h_, ic: (b_, ic, h_ * kh // h, 0))
-    mask_spec = pl.BlockSpec((1, block_c), lambda b_, h_, ic: (0, ic))
+    mask_spec = pl.BlockSpec(
+        (1, block_c),
+        (lambda b_, h_, ic: (0, ic)) if shared_mask
+        else (lambda b_, h_, ic: (b_, ic)))
     out_spec = pl.BlockSpec((1, 1, d), lambda b_, h_, ic: (b_, h_, 0))
 
     kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap)

@@ -58,7 +58,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None, block_c: int = 512,
                      interpret: Optional[bool] = None) -> jax.Array:
-    """q [B,1,H,D] or [B,H,D]; caches [B,C,KH,D]; key_pos [C]; pos scalar."""
+    """q [B,1,H,D] or [B,H,D]; caches [B,C,KH,D]; key_pos [C] or [B,C];
+    pos scalar or [B] (per-row decode positions after a masked, length-
+    bucketed prefill)."""
     if interpret is None:
         interpret = _on_cpu()
     if q.ndim == 4:
@@ -69,12 +71,13 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     bc = min(block_c, c) if c % block_c else block_c
     if c % bc:
         bc = c            # tiny caches: single block
-    mask = (key_pos >= 0) & (key_pos <= pos)
+    pos_b = pos[..., None] if pos.ndim else pos     # [B,1] | scalar
+    mask = (key_pos >= 0) & (key_pos <= pos_b)
     if window is not None:
-        mask &= key_pos > pos - window
+        mask &= key_pos > pos_b - window
     kp = _pad_to(k_cache, 1, bc)
     vp = _pad_to(v_cache, 1, bc)
-    maskp = _pad_to(mask[None, :], 1, bc)
+    maskp = _pad_to(mask if mask.ndim == 2 else mask[None, :], 1, bc)
     out = decode_attention_bhd(q3, kp, vp, maskp, softcap=softcap,
                                block_c=bc, interpret=interpret)
     if q.ndim == 4:

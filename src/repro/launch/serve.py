@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--varlen", action="store_true",
                     help="vary prompt lengths in [prompt_len/2, prompt_len] "
                          "(bucketed admission serves them in one batch)")
+    ap.add_argument("--min-bucket", type=int, default=1,
+                    help="admission bucket floor (pow-2 padding; masked "
+                         "prefill makes any bucket size output-identical, "
+                         "so this is purely a compile-shape knob)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--kvint8", action="store_true",
@@ -100,7 +104,8 @@ def main():
             mesh = jax.make_mesh((1, args.devices), ("data", "model"))
         llm = LLM.from_backend(runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
-            max_len=args.max_len, mesh=mesh, **kv_kw), seed=args.seed)
+            max_len=args.max_len, mesh=mesh, **kv_kw), seed=args.seed,
+            min_bucket=args.min_bucket)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -114,7 +119,7 @@ def main():
                      dtype_bytes=2),
             objective="throughput", kind="pipeline", params=params,
             n_slots=args.slots or None, max_len=args.max_len, seed=args.seed,
-            **kv_kw)
+            min_bucket=args.min_bucket, **kv_kw)
         n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "

@@ -6,6 +6,11 @@ Three entry points sharing one set of parameters:
 - :func:`attend_decode`   — one token against a (ring-buffer) KV cache,
 - :func:`prefill_cache`   — populate the cache while running prefill.
 
+Prefill supports *masked* left-padded batches: pass per-row positions
+[B, S] where pad slots hold negative values — pad keys are masked out of
+the softmax and written with ``key_pos == -1``, so the output for real
+tokens (and every later decode step) is independent of the padded width.
+
 ``impl="xla"`` is the pure-jnp reference; ``impl="pallas"`` dispatches the
 flash-attention Pallas kernel for the full-sequence path (prefill hot spot).
 """
@@ -107,14 +112,17 @@ def _sdpa(cfg: ModelConfig, spec: BlockSpec, q: jax.Array, k: jax.Array,
 
 def _sdpa_chunked(cfg: ModelConfig, spec: BlockSpec, q: jax.Array,
                   k: jax.Array, v: jax.Array, q_pos: jax.Array,
-                  k_pos: jax.Array, block: int = 1024) -> jax.Array:
+                  k_pos: jax.Array, k_valid: Optional[jax.Array] = None,
+                  block: int = 1024) -> jax.Array:
     """Online-softmax attention over key blocks (flash-style, pure XLA).
 
     Never materializes the [.., Sq, Sk] logits — the SPerf lever for the
     memory-term-dominated prefill rows: working set drops from O(Sq*Sk) to
     O(Sq*block).  Semantics identical to :func:`_sdpa` (causal + window +
-    softcap masking).  Sk must be divisible by ``block`` (pad upstream or
-    pick a divisor).
+    softcap + validity masking), including the per-row calling convention
+    (``q_pos``/``k_pos`` [B, S], ``k_valid`` [B, Sk]) used by masked
+    prefill.  Sk must be divisible by ``block`` (pad upstream or pick a
+    divisor).
     """
     b, sq, h, hd = q.shape
     sk = k.shape[1]
@@ -124,21 +132,37 @@ def _sdpa_chunked(cfg: ModelConfig, spec: BlockSpec, q: jax.Array,
     qg = q.reshape(b, sq, cfg.n_kv_heads, g, hd)
     kb = k.reshape(b, sk // block, block, cfg.n_kv_heads, hd)
     vb = v.reshape(b, sk // block, block, cfg.n_kv_heads, hd)
-    pb = k_pos.reshape(sk // block, block)
+    nb = sk // block
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (b, sk))
+    pb = k_pos.reshape(b, nb, block).swapaxes(0, 1)          # [nb, B, block]
+    if k_valid is not None:
+        if k_valid.ndim == 1:
+            k_valid = jnp.broadcast_to(k_valid[None], (b, sk))
+        vld = k_valid.reshape(b, nb, block).swapaxes(0, 1)
+    else:
+        vld = jnp.ones((nb, b, block), bool)
     scale = hd ** -0.5
 
     def step(carry, inp):
         m, l, acc = carry                     # [b,n,g,sq], same, [b,n,g,sq,hd]
-        k_c, v_c, kp = inp                    # [b,block,n,hd] x2, [block]
+        k_c, v_c, kp, kv = inp                # [b,block,n,hd] x2, [b,block] x2
         logits = jnp.einsum("bsngd,btnd->bngst", qg, k_c,
                             preferred_element_type=jnp.float32) * scale
         logits = softcap(logits, cfg.attn_logit_softcap)
-        msk = kp[None, :] <= q_pos[:, None]
+        msk = kp[:, None, :] <= q_pos[:, :, None]             # [b, sq, block]
         if spec.window is not None:
-            msk &= kp[None, :] > (q_pos[:, None] - spec.window)
-        logits = jnp.where(msk[None, None, None, :, :], logits, NEG_INF)
+            msk &= kp[:, None, :] > (q_pos[:, :, None] - spec.window)
+        msk &= kv[:, None, :]
+        logits = jnp.where(msk[:, None, None, :, :], logits, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
-        p = jnp.exp(logits - m_new[..., None])
+        # explicit zero under the mask: a fully-masked block (all-pad keys
+        # under masked prefill) keeps m at NEG_INF, where exp(logit - m)
+        # would be 1, not 0
+        p = jnp.where(msk[:, None, None, :, :],
+                      jnp.exp(logits - m_new[..., None]), 0.0)
         alpha = jnp.exp(m - m_new)
         l_new = l * alpha + jnp.sum(p, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
@@ -150,7 +174,7 @@ def _sdpa_chunked(cfg: ModelConfig, spec: BlockSpec, q: jax.Array,
     a0 = jnp.zeros((b, cfg.n_kv_heads, g, sq, hd), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(
         step, (m0, l0, a0),
-        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pb))
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pb, vld))
     out = acc / jnp.maximum(l, 1e-30)[..., None]          # [b,n,g,sq,hd]
     out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * hd)
     return out.astype(q.dtype)
@@ -190,60 +214,87 @@ def _dequantize_kv(q8: jax.Array, scale: jax.Array, dtype) -> jax.Array:
 def prefill_cache(params: Dict, cfg: ModelConfig, spec: BlockSpec,
                   x: jax.Array, positions: jax.Array, cache: Dict,
                   impl: str = "xla") -> Tuple[jax.Array, Dict]:
-    """Run prefill AND write k/v into the (possibly ring) cache."""
+    """Run prefill AND write k/v into the (possibly ring) cache.
+
+    ``positions`` is [S] (batch-shared) or [B, S] (per-row, the masked
+    left-padded prefill path).  Per-row positions may be *negative* at pad
+    slots; those keys are masked out of the attention (``k_valid``) and
+    written with ``key_pos == -1``, so pads never become valid cache keys
+    and the computed prefix is bit-for-bit the unpadded continuation.
+
+    The returned cache carries per-row ``key_pos [B, C]`` and ``pos [B]``
+    (rows in one wave may hold different true lengths).
+    """
+    b, s = x.shape[:2]
     q, k, v = _project_qkv(params, cfg, x, positions)
-    out = _sdpa(cfg, spec, q, k, v, positions, positions)
+    pos_b = positions if positions.ndim == 2 \
+        else jnp.broadcast_to(positions[None], (b, s))
+    valid = pos_b >= 0                                           # [B, S]
+    if impl == "chunked":
+        out = _sdpa_chunked(cfg, spec, q, k, v, pos_b, pos_b, k_valid=valid)
+    else:
+        out = _sdpa(cfg, spec, q, k, v, pos_b, pos_b, k_valid=valid)
     y = out @ params["wo"]
     y = logical_constraint(y, "batch", None, "embed")
     c = cache["k"].shape[1]
-    k_tail, v_tail, pos_tail = k, v, positions
+    k_tail, v_tail, pos_tail, valid_tail = k, v, pos_b, valid
     if k.shape[1] > c:          # sliding window: only the last c tokens survive
-        k_tail, v_tail, pos_tail = k[:, -c:], v[:, -c:], positions[-c:]
-    slots = pos_tail % c
-    key_pos = cache["key_pos"].at[slots].set(pos_tail.astype(jnp.int32))
+        k_tail, v_tail = k[:, -c:], v[:, -c:]
+        pos_tail, valid_tail = pos_b[:, -c:], valid[:, -c:]
+    # each row's tail positions are S' contiguous integers, so `% c` maps
+    # them to distinct ring slots — pad writes land on slots no valid token
+    # occupies and are neutralized by key_pos == -1
+    slots = pos_tail % c                                         # [B, S']
+    rows = jnp.arange(b)[:, None]
+    key_pos = cache["key_pos"].at[rows, slots].set(
+        jnp.where(valid_tail, pos_tail, -1).astype(jnp.int32))
+    new_pos = pos_b[:, -1].astype(jnp.int32) + 1                 # [B]
     if cfg.kv_dtype == "int8":
         k8, ks = _quantize_kv(k_tail)
         v8, vs = _quantize_kv(v_tail)
-        new_cache = {"k": cache["k"].at[:, slots].set(k8),
-                     "v": cache["v"].at[:, slots].set(v8),
-                     "k_scale": cache["k_scale"].at[:, slots].set(ks),
-                     "v_scale": cache["v_scale"].at[:, slots].set(vs),
+        new_cache = {"k": cache["k"].at[rows, slots].set(k8),
+                     "v": cache["v"].at[rows, slots].set(v8),
+                     "k_scale": cache["k_scale"].at[rows, slots].set(ks),
+                     "v_scale": cache["v_scale"].at[rows, slots].set(vs),
                      "key_pos": key_pos,
-                     "pos": positions[-1].astype(jnp.int32) + 1}
+                     "pos": new_pos}
         return y, new_cache
-    ck = cache["k"].at[:, slots].set(k_tail.astype(cache["k"].dtype))
-    cv = cache["v"].at[:, slots].set(v_tail.astype(cache["v"].dtype))
-    new_cache = {"k": ck, "v": cv, "key_pos": key_pos,
-                 "pos": positions[-1].astype(jnp.int32) + 1}
+    ck = cache["k"].at[rows, slots].set(k_tail.astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, slots].set(v_tail.astype(cache["v"].dtype))
+    new_cache = {"k": ck, "v": cv, "key_pos": key_pos, "pos": new_pos}
     return y, new_cache
 
 
 def attend_decode(params: Dict, cfg: ModelConfig, spec: BlockSpec,
                   x: jax.Array, cache: Dict, impl: str = "xla",
                   ) -> Tuple[jax.Array, Dict]:
-    """One-token decode against the cache. x: [B, 1, d]."""
-    pos = cache["pos"]
-    positions = pos[None]                                        # [1]
+    """One-token decode against the cache. x: [B, 1, d].
+
+    ``pos`` is per-row [B] and ``key_pos`` per-row [B, C] — after a masked
+    (length-bucketed) prefill each row sits at its own true position, so
+    every row writes and attends its own ring independently.
+    """
+    b = x.shape[0]
+    pos = cache["pos"]                                           # [B]
+    positions = pos[:, None]                                     # [B, 1]
     q, k, v = _project_qkv(params, cfg, x, positions)
     c = cache["k"].shape[1]
-    slot = pos % c
+    slot = pos % c                                               # [B]
+    rows = jnp.arange(b)
     quant = cfg.kv_dtype == "int8"
     if quant:
         k8, ks = _quantize_kv(k)
         v8, vs = _quantize_kv(v)
-        c8k = jax.lax.dynamic_update_slice(cache["k"], k8, (0, slot, 0, 0))
-        c8v = jax.lax.dynamic_update_slice(cache["v"], v8, (0, slot, 0, 0))
-        csk = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
-        csv = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        c8k = cache["k"].at[rows, slot].set(k8[:, 0])
+        c8v = cache["v"].at[rows, slot].set(v8[:, 0])
+        csk = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+        csv = cache["v_scale"].at[rows, slot].set(vs[:, 0])
         ck = _dequantize_kv(c8k, csk, k.dtype)
         cv = _dequantize_kv(c8v, csv, v.dtype)
     else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
-    key_pos = jax.lax.dynamic_update_slice(cache["key_pos"],
-                                           pos[None].astype(jnp.int32), (slot,))
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    key_pos = cache["key_pos"].at[rows, slot].set(pos.astype(jnp.int32))
     if impl == "pallas":
         from repro.kernels import ops as kops
         out = kops.decode_attention(

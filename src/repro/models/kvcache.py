@@ -4,7 +4,10 @@ Caches are plain dict pytrees so they stack cleanly under ``lax.scan`` and
 shard with the same logical-axis rules as activations:
 
 - attention:  k/v ``[B, C, n_kv, head_dim]`` (C = min(max_len, window)),
-  ``key_pos [C]`` absolute position per slot (-1 = empty), ``pos`` scalar.
+  ``key_pos [B, C]`` absolute position per ring slot (-1 = empty),
+  ``pos [B]`` decode position — both *per-row*, so one wave of
+  length-bucketed (masked, left-padded) prefills can hold a different true
+  length per sequence.
 - rglru:      hidden ``[B, rnn]``, conv tail ``[B, conv_width-1, rnn]``.
 - mlstm:      C ``[B, heads, dk, dv]``, n ``[B, heads, dk]``, m ``[B, heads]``.
 - slstm:      c/n/h ``[B, d]``, m ``[B, d]`` (stabilizer).
@@ -81,7 +84,7 @@ def init_paged_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
       they can never corrupt another slot's blocks,
     - ``bt`` ``[B, max_ctx_blocks]`` int32 physical block ids (-1 = unmapped),
     - ``key_pos`` ``[B, paged_cache_len]`` absolute position per ring slot
-      (-1 = empty) — per-slot, unlike the contiguous batch-shared layout,
+      (-1 = empty), per-slot like the contiguous layout,
     - ``pos`` ``[B]`` per-slot decode position.
     """
     assert spec.kind == "attn", spec.kind
@@ -124,21 +127,21 @@ def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
                                 cfg.resolved_head_dim), jnp.int8),
                 "k_scale": jnp.zeros((batch, c, cfg.n_kv_heads), jnp.float32),
                 "v_scale": jnp.zeros((batch, c, cfg.n_kv_heads), jnp.float32),
-                "key_pos": jnp.full((c,), -1, jnp.int32),
-                "pos": jnp.zeros((), jnp.int32),
+                "key_pos": jnp.full((batch, c), -1, jnp.int32),
+                "pos": jnp.zeros((batch,), jnp.int32),
             }
         return {
             "k": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
             "v": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
-            "key_pos": jnp.full((c,), -1, jnp.int32),
-            "pos": jnp.zeros((), jnp.int32),
+            "key_pos": jnp.full((batch, c), -1, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     if spec.kind == "rglru":
         r = cfg.rnn_dim
         return {
             "h": jnp.zeros((batch, r), jnp.float32),
             "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     if spec.kind == "mlstm":
         dp = int(cfg.d_model * cfg.mlstm_proj_factor)
@@ -147,7 +150,7 @@ def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
             "C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
             "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
             "m": jnp.zeros((batch, cfg.n_heads), jnp.float32),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     if spec.kind == "slstm":
         d = cfg.d_model
@@ -156,7 +159,7 @@ def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
             "n": jnp.zeros((batch, d), jnp.float32),
             "h": jnp.zeros((batch, d), jnp.float32),
             "m": jnp.zeros((batch, d), jnp.float32),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     raise ValueError(spec.kind)
 
@@ -168,17 +171,19 @@ def cache_logical_axes(cfg: ModelConfig, spec: BlockSpec) -> Dict:
         # small to fill the data axis) remaps it to ("data",) instead.
         out = {"k": ("batch", "seq_kv", "kv_heads", None),
                "v": ("batch", "seq_kv", "kv_heads", None),
-               "key_pos": ("seq_kv",), "pos": ()}
+               "key_pos": ("batch", "seq_kv"), "pos": ("batch",)}
         if cfg.kv_dtype == "int8":
             out["k_scale"] = ("batch", "seq_kv", "kv_heads")
             out["v_scale"] = ("batch", "seq_kv", "kv_heads")
         return out
     if spec.kind == "rglru":
-        return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn"), "pos": ()}
+        return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn"),
+                "pos": ("batch",)}
     if spec.kind == "mlstm":
         return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
-                "m": ("batch", "heads"), "pos": ()}
+                "m": ("batch", "heads"), "pos": ("batch",)}
     if spec.kind == "slstm":
         return {"c": ("batch", "embed"), "n": ("batch", "embed"),
-                "h": ("batch", "embed"), "m": ("batch", "embed"), "pos": ()}
+                "h": ("batch", "embed"), "m": ("batch", "embed"),
+                "pos": ("batch",)}
     raise ValueError(spec.kind)

@@ -86,11 +86,21 @@ def _causal_conv(params: Dict, x: jax.Array,
 
 def apply_rglru_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
                     state: Optional[Dict] = None, impl: str = "xla",
+                    seq_valid: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Sequence mode. x: [B, S, d] -> (y [B, S, d], new state or None)."""
+    """Sequence mode. x: [B, S, d] -> (y [B, S, d], new state or None).
+
+    ``seq_valid`` ([B, S], masked left-padded prefill) turns pad steps into
+    state-preserving no-ops: their conv input is zeroed (so the causal
+    window over the first real tokens sees the same zeros as an unpadded
+    fresh start) and the recurrence uses ``a = 1, b = 0`` (identity), so
+    ``h`` at every real position depends only on real tokens.
+    """
     gelu_branch = jax.nn.gelu(x @ params["w_gelu"], approximate=True)
     u = x @ params["w_rnn_in"]
     u = logical_constraint(u, "batch", None, "rnn")
+    if seq_valid is not None:
+        u = jnp.where(seq_valid[..., None], u, 0)
     u, new_conv = _causal_conv(params, u,
                                state["conv"] if state is not None else None)
     gate_a = (x @ params["w_a"]).astype(jnp.float32)
@@ -99,6 +109,9 @@ def apply_rglru_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
     i_t = jax.nn.sigmoid(gate_x)
     mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     b = mult * i_t * u.astype(jnp.float32)
+    if seq_valid is not None:
+        log_a = jnp.where(seq_valid[..., None], log_a, 0.0)   # a_t = 1
+        b = jnp.where(seq_valid[..., None], b, 0.0)           # b_t = 0
     h0 = state["h"] if state is not None else None
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -109,8 +122,10 @@ def apply_rglru_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
     y = logical_constraint(y, "batch", None, "embed")
     if state is None:
         return y, None
+    n_real = x.shape[1] if seq_valid is None \
+        else jnp.sum(seq_valid, axis=1).astype(jnp.int32)
     new_state = {"h": h[:, -1].astype(jnp.float32), "conv": new_conv,
-                 "pos": state["pos"] + x.shape[1]}
+                 "pos": state["pos"] + n_real}
     return y, new_state
 
 

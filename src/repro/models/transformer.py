@@ -130,15 +130,15 @@ def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
                       dtype=jnp.bfloat16) -> PyTree:
     """Paged twin of :func:`init_caches`: attention entries hold shared
     block pools + per-slot block tables (``batch`` = slots); non-attention
-    entries keep their dense per-slot state, with ``pos`` widened to [B] so
-    every slot owns its position in the batched (vmap-free) decode."""
+    entries keep their dense per-slot state (``pos`` is per-slot [B] in
+    every layout, so each slot owns its position in the batched, vmap-free
+    decode)."""
     def one_entry(spec: BlockSpec, stack_layers: int = 0):
         if spec.kind == "attn":
             one = init_paged_block_cache(cfg, spec, batch, max_len,
                                          num_blocks, block_size, dtype)
         else:
             one = init_block_cache(cfg, spec, batch, max_len, dtype)
-            one["pos"] = jnp.zeros((batch,), jnp.int32)
         if stack_layers:
             one = jax.tree.map(
                 lambda x: jnp.broadcast_to(
@@ -187,9 +187,16 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
                  x: jax.Array, positions: jax.Array, mode: str,
                  cache: Optional[Dict], impl: str,
                  write_mask: Optional[jax.Array] = None,
+                 seq_valid: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (x_out, new_cache, aux_loss).  ``write_mask`` gates paged
-    KV-pool writes (idle slots / dead pipeline ticks scatter to scratch)."""
+    KV-pool writes (idle slots / dead pipeline ticks scatter to scratch).
+
+    ``seq_valid`` ([B, S], masked prefill) marks pad positions invalid:
+    attention masks them via the negative per-row ``positions``, recurrent
+    mixers treat them as state-preserving no-ops, and the block re-zeroes
+    pad activations on exit so they cannot leak into later layers (e.g.
+    through a causal conv window)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x, cfg.norm)
     new_cache = cache
@@ -213,21 +220,23 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
         else:
             mix, new_cache = rglru_mod.apply_rglru_seq(
                 params["mixer"], cfg, h, cache if mode == "prefill" else None,
-                impl)
+                impl, seq_valid=seq_valid)
     elif spec.kind == "mlstm":
         if mode == "decode":
             mix, new_cache = xlstm_mod.apply_mlstm_decode(params["mixer"], cfg,
                                                           h, cache)
         else:
             mix, new_cache = xlstm_mod.apply_mlstm_seq(
-                params["mixer"], cfg, h, cache if mode == "prefill" else None)
+                params["mixer"], cfg, h, cache if mode == "prefill" else None,
+                seq_valid=seq_valid)
     elif spec.kind == "slstm":
         if mode == "decode":
             mix, new_cache = xlstm_mod.apply_slstm_decode(params["mixer"], cfg,
                                                           h, cache)
         else:
             mix, new_cache = xlstm_mod.apply_slstm_seq(
-                params["mixer"], cfg, h, cache if mode == "prefill" else None)
+                params["mixer"], cfg, h, cache if mode == "prefill" else None,
+                seq_valid=seq_valid)
     else:
         raise ValueError(spec.kind)
     if cfg.post_norm:
@@ -242,6 +251,8 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
         if cfg.post_norm:
             ffn = apply_norm(params["post_norm2"], ffn, cfg.norm)
         x = x + ffn
+    if seq_valid is not None:
+        x = jnp.where(seq_valid[..., None], x, 0)
     if mode == "train":
         new_cache = None
     return x, new_cache, aux
@@ -268,15 +279,35 @@ def _embed_inputs(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
 def forward(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
             mode: str = "train", caches: Optional[PyTree] = None,
             pos_offset: int = 0, impl: str = "xla",
+            prompt_lens: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     """Full-sequence forward. inputs: [B, S] int tokens or [B, S, d] embeds.
 
     Returns (logits [B, S, vocab], caches or None, aux_loss scalar).
+
+    ``prompt_lens`` ([B] int, prefill only) marks inputs as *left-padded*
+    to S with true lengths ``prompt_lens[b]``: positions become per-row
+    (``s - (S - plen)``; negative at pads), pad keys are masked out of
+    attention and written with ``key_pos == -1``, recurrent state skips pad
+    steps, and pad activations are zeroed between blocks — so logits at
+    real positions and the resulting caches are independent of the padded
+    width (pad tokens are semantically invisible).
     """
     assert mode in ("train", "prefill")
     b, s = inputs.shape[:2]
-    positions = jnp.arange(s, dtype=jnp.int32) + pos_offset
+    if prompt_lens is None:
+        positions = jnp.arange(s, dtype=jnp.int32) + pos_offset
+        seq_valid = None
+    else:
+        assert mode == "prefill" and pos_offset == 0, \
+            "prompt_lens implies a left-padded prefill from position 0"
+        plen = jnp.asarray(prompt_lens, jnp.int32)
+        positions = jnp.arange(s, dtype=jnp.int32)[None] \
+            - (s - plen)[:, None]                                # [B, S]
+        seq_valid = positions >= 0
     x = _embed_inputs(cfg, params, inputs, positions)
+    if seq_valid is not None:
+        x = jnp.where(seq_valid[..., None], x, 0)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
 
@@ -291,7 +322,8 @@ def forward(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
             for p, spec in enumerate(cfg.pattern):
                 cache_p = p_caches[f"p{p}"] if p_caches is not None else None
                 x_c, nc, aux = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
-                                            positions, mode, cache_p, impl)
+                                            positions, mode, cache_p, impl,
+                                            seq_valid=seq_valid)
                 new_p_caches[f"p{p}"] = nc
                 aux_c = aux_c + aux
             ys = new_p_caches if mode == "prefill" else None
@@ -308,7 +340,8 @@ def forward(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
         for t, spec in enumerate(cfg.tail):
             cache_t = (caches or {}).get("tail", {}).get(f"t{t}")
             x, nc, aux = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
-                                      positions, mode, cache_t, impl)
+                                      positions, mode, cache_t, impl,
+                                      seq_valid=seq_valid)
             new_tail[f"t{t}"] = nc
             aux_total = aux_total + aux
         if mode == "prefill":
@@ -327,11 +360,12 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
 
     Returns (logits [B, vocab], updated caches).
 
-    Contiguous caches share one position across the batch (callers vmap for
-    per-slot positions).  Paged caches (:func:`init_paged_caches`) carry
-    per-slot ``pos [B]`` and run the whole batch in one pass — every slot at
-    its own position, KV gathered/scattered through its block table;
-    ``write_mask [B]`` freezes masked slots' pool writes.
+    Every cache kind carries per-row ``pos [B]`` (attention additionally
+    per-row ``key_pos``), so every sequence decodes at its own true
+    position — the masked length-bucketed prefill leaves rows at different
+    lengths.  Paged caches (:func:`init_paged_caches`) additionally route
+    KV through per-slot block tables; ``write_mask [B]`` freezes masked
+    slots' pool writes.
     """
     if inputs.ndim == 1 and jnp.issubdtype(inputs.dtype, jnp.integer):
         inputs2 = inputs[:, None]
@@ -373,16 +407,16 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
 
 
 def _first_pos(caches: PyTree) -> jax.Array:
-    """Current decode position(s): scalar (contiguous, batch-shared) or [B]
-    (paged, per-slot).  Prefer an attention entry — in paged trees its
-    ``pos`` is authoritative per slot."""
+    """Current decode position(s), [B] per-slot in every cache kind.
+    Prefer an attention entry — its ``pos`` is authoritative per slot and
+    may differ per row after a masked (length-bucketed) prefill."""
     entries = []
     if "stack" in caches:
         entries += [(e, True) for e in caches["stack"].values()]
     if "tail" in caches:
         entries += [(e, False) for e in caches["tail"].values()]
     for e, stacked in entries:
-        if is_paged_attn_cache(e):
+        if is_paged_attn_cache(e) or (isinstance(e, dict) and "key_pos" in e):
             return e["pos"][0] if stacked else e["pos"]
     e, stacked = entries[0]
     return e["pos"][0] if stacked else e["pos"]

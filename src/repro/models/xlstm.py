@@ -85,14 +85,24 @@ def mlstm_parallel(q, k, v, log_i, log_f):
 
 def apply_mlstm_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
                     state: Optional[Dict] = None,
+                    seq_valid: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict]]:
     """Sequence mode (train / prefill). x: [B, S, d].
 
     Note: when a fresh state dict is supplied, the final (C, n, m) state is
     reconstructed recurrently from the parallel outputs for decode handoff.
+
+    ``seq_valid`` ([B, S], masked left-padded prefill) excludes pad steps:
+    their input gate is forced to ~0 (``log i = -1e30`` — exact zero weight
+    after the exp) and their forget gate to 1 (``log f = 0``, a no-op in
+    the cumulative sum), so outputs at real positions and the handed-off
+    state depend only on real tokens.
     """
     b, s, d = x.shape
     q, k, v, log_i, log_f, gate = _mlstm_qkv_gates(params, cfg, x)
+    if seq_valid is not None:
+        log_i = jnp.where(seq_valid[..., None], log_i, -1e30)
+        log_f = jnp.where(seq_valid[..., None], log_f, 0.0)
     hseq, m, F = mlstm_parallel(q, k, v, log_i, log_f)
     hd = q.shape[-1]
     out = (hseq.reshape(b, s, -1).astype(x.dtype)) * jax.nn.silu(gate)
@@ -107,7 +117,9 @@ def apply_mlstm_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
     C = jnp.einsum("bsh,bshd,bshe->bhde", wgt, k.astype(jnp.float32) * scale,
                    v.astype(jnp.float32))
     n = jnp.einsum("bsh,bshd->bhd", wgt, k.astype(jnp.float32) * scale)
-    new_state = {"C": C, "n": n, "m": m_last, "pos": state["pos"] + s}
+    n_real = s if seq_valid is None \
+        else jnp.sum(seq_valid, axis=1).astype(jnp.int32)
+    new_state = {"C": C, "n": n, "m": m_last, "pos": state["pos"] + n_real}
     return y, new_state
 
 
@@ -184,24 +196,42 @@ def _slstm_step(params, cfg, carry, xt):
 
 def apply_slstm_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
                     state: Optional[Dict] = None,
+                    seq_valid: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Sequence mode via lax.scan over time. x: [B, S, d]."""
+    """Sequence mode via lax.scan over time. x: [B, S, d].
+
+    ``seq_valid`` ([B, S], masked left-padded prefill): pad steps carry the
+    (c, n, h, m) state through unchanged, so the sequential recurrence over
+    real tokens is bit-identical to an unpadded run.
+    """
     b, s, d = x.shape
     if state is None:
         carry = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
     else:
         carry = (state["c"], state["n"], state["h"], state["m"])
 
-    def step(carry, xt):
-        return _slstm_step(params, cfg, carry, xt)
+    if seq_valid is None:
+        def step(carry, xt):
+            return _slstm_step(params, cfg, carry, xt)
+        xs = jnp.swapaxes(x, 0, 1)
+    else:
+        def step(carry, inp):
+            xt, vt = inp
+            new_carry, ht = _slstm_step(params, cfg, carry, xt)
+            kept = tuple(jnp.where(vt[:, None], new, old)
+                         for new, old in zip(new_carry, carry))
+            return kept, ht
+        xs = (jnp.swapaxes(x, 0, 1), jnp.swapaxes(seq_valid, 0, 1))
 
-    (c, n, h, m), hs = jax.lax.scan(step, carry, jnp.swapaxes(x, 0, 1))
+    (c, n, h, m), hs = jax.lax.scan(step, carry, xs)
     hs = jnp.swapaxes(hs, 0, 1).astype(x.dtype)                   # [B,S,d]
     y = jax.nn.gelu(hs @ params["w_up"], approximate=True) @ params["w_down"]
     y = logical_constraint(y, "batch", None, "embed")
     if state is None:
         return y, None
-    return y, {"c": c, "n": n, "h": h, "m": m, "pos": state["pos"] + s}
+    n_real = s if seq_valid is None \
+        else jnp.sum(seq_valid, axis=1).astype(jnp.int32)
+    return y, {"c": c, "n": n, "h": h, "m": m, "pos": state["pos"] + n_real}
 
 
 def apply_slstm_decode(params: Dict, cfg: ModelConfig, x: jax.Array,

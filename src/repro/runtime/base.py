@@ -154,18 +154,26 @@ class SlotPager:
         self.n_alloc[slot] = 0
         return True
 
-    def realloc_wave(self, slots: Sequence[int], n_tokens: int) -> None:
+    def realloc_wave(self, slots: Sequence[int], n_tokens) -> None:
         """Release every slot in an admission wave, then grow each table to
-        cover ``n_tokens`` prompt positions — atomically: on
-        :class:`PoolExhausted` the partial growth is rolled back (the wave's
-        slots end empty, which is what they were: freed slots being
-        re-admitted), so the caller can preempt and retry."""
+        cover its prompt positions — atomically: on :class:`PoolExhausted`
+        the partial growth is rolled back (the wave's slots end empty,
+        which is what they were: freed slots being re-admitted), so the
+        caller can preempt and retry.
+
+        ``n_tokens`` is one shared length or a per-slot sequence (masked
+        prefill allocates each slot's *true* prompt length, not the padded
+        bucket)."""
+        lens = [int(n_tokens)] * len(slots) \
+            if np.ndim(n_tokens) == 0 else [int(n) for n in n_tokens]
+        assert len(lens) == len(slots), (len(lens), len(slots))
         for s in slots:
             self.release(s)
         grown: List[int] = []
         try:
-            for s in slots:
-                self.ensure(s, n_tokens - 1)
+            for s, n in zip(slots, lens):
+                if n > 0:
+                    self.ensure(s, n - 1)
                 grown.append(s)
         except PoolExhausted:
             for s in grown:
@@ -253,8 +261,16 @@ class InferenceBackend(abc.ABC):
 
     @abc.abstractmethod
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                prompt_lens: Optional[Sequence[int]] = None,
                 ) -> List[SlotEvent]:
         """Admit ``prompts[i]`` (shape [S], int32) into ``slots[i]``.
+
+        ``prompt_lens[i]`` is the *true* length of prompt ``i``;
+        ``prompts`` is then left-padded to a shared width S and the backend
+        must treat the leading pads as semantically invisible (masked out
+        of attention, never valid cache keys, positions 0..len-1) — the
+        slot's outputs must equal an exact-length unpadded prefill.  With
+        ``prompt_lens=None`` every prompt is taken at face value (len = S).
 
         Resets each slot's cache state.  Backends that process prompts
         synchronously return one event per slot (logits after the last

@@ -191,22 +191,36 @@ class PipelineBackend(InferenceBackend):
 
     # ------------------------------------------------------------------ #
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                prompt_lens: Optional[Sequence[int]] = None,
                 ) -> List[SlotEvent]:
         """Admit prompts; tokens stream through subsequent ticks, so the
-        first sampled token arrives from a later ``decode_step``."""
+        first sampled token arrives from a later ``decode_step``.
+
+        ``prompt_lens[i]`` marks ``prompts[i]`` as left-padded to a bucket
+        with true length ``prompt_lens[i]``.  Teacher-forcing is inherently
+        shape-free (one token per tick), so pad neutrality here is exact by
+        construction: the pads are *stripped* and only the real tokens are
+        fed, starting at position 0 — which also saves the pad ticks."""
         prompts = np.asarray(prompts, np.int32)
         if prompts.ndim == 2:                       # [k, S] -> lanes dim
             assert self.lanes == 1
             prompts = prompts[:, :, None]
         assert prompts.shape[0] == len(slots)
         assert prompts.shape[2] == self.lanes
+        if prompt_lens is None:
+            lens = [prompts.shape[1]] * len(slots)
+        else:
+            lens = [int(n) for n in prompt_lens]
+            assert len(lens) == len(slots)
+            assert all(1 <= n <= prompts.shape[1] for n in lens), \
+                (lens, prompts.shape)
         with self.mesh:
             for i, slot in enumerate(slots):
                 if self.pager is not None:
                     if self.pager.release(slot):  # blocks grow lazily per tick
                         self._bt_dirty = True
                 self.state = self._reset_fn(self.state, jnp.asarray(slot))
-                self._prompts[slot] = prompts[i]
+                self._prompts[slot] = prompts[i, prompts.shape[1] - lens[i]:]
                 self._rounds[slot] = 0
                 self._gen_ready[slot] = 0
                 self._epoch[slot] = self._epoch.get(slot, 0) + 1

@@ -100,17 +100,22 @@ class SimBackend(InferenceBackend):
                          token=int(self._rng.integers(0, self._vocab)))
 
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                prompt_lens: Optional[Sequence[int]] = None,
                 ) -> List[SlotEvent]:
         prompts = np.atleast_2d(np.asarray(prompts))
+        lens = [prompts.shape[1]] * len(slots) if prompt_lens is None \
+            else [int(n) for n in prompt_lens]
+        assert len(lens) == len(slots)
         if self.pager is not None:
-            # atomic: on exhaustion nothing mutates
-            self.pager.realloc_wave(slots, prompts.shape[1])
+            # atomic: on exhaustion nothing mutates; paging accounts each
+            # slot's TRUE prompt length — pads hold no blocks
+            self.pager.realloc_wave(slots, lens)
         out = []
-        for slot in slots:
+        for slot, plen in zip(slots, lens):
             self._active[slot] = True
             self._fed[slot] = 0
             self._seen[slot] = 0
-            self._plen[slot] = prompts.shape[1]
+            self._plen[slot] = plen
             self._ready[slot] = self.makespan if self.schedule == "bubbles" \
                 else self._ready[slot]
             self._run_through_stages(slot, prefill=True)

@@ -25,6 +25,12 @@ Two cache layouts, selectable via ``cache_layout``:
   contiguous kernel over the admission wave (sized by the *bucketed prompt
   length*, not ``max_len``), then scatters the wave's ring caches into the
   pool by absolute position.
+
+Both layouts run *masked* prefill: ``prefill(slots, prompts, prompt_lens)``
+left-pads to the bucket but masks pads out of attention and never writes
+them as valid cache keys (``models/transformer.py::forward``), so a slot's
+outputs are independent of the padded width — identical to an exact-length
+unpadded prefill, whichever bucket admission chose.
 """
 from __future__ import annotations
 
@@ -139,15 +145,17 @@ class TensorBackend(InferenceBackend):
         return self._live_info()
 
     # ------------------------------------------------------------------ #
-    # contiguous scatter (unchanged from the pre-paging backend)
+    # contiguous scatter: wave prefill caches -> per-slot storage
     # ------------------------------------------------------------------ #
     def _scatter(self, storage: PyTree, new: PyTree, idx: jax.Array) -> PyTree:
         """Write batch-k prefill caches into per-slot storage at ``idx``.
 
-        Prefill leaves carry one shared batch dim (where the logical axes
-        say "batch") or none at all (``key_pos`` / ``pos`` are batch-shared
-        in the engine layout); per-slot storage keeps a size-1 batch dim in
-        every leaf so the vmapped decode sees the [B=1] cache shape.
+        Every stateful leaf — ``key_pos``/``pos`` included, which are
+        per-row since masked prefill — carries a batch dim where the
+        logical axes say "batch" and lands at its slot's row; the rare
+        batch-free leaf is replicated.  Per-slot storage keeps a size-1
+        batch dim in every batched leaf so the vmapped decode sees the
+        [B=1] cache shape.
         """
         k = idx.shape[0]
         s_leaves, ax_leaves, treedef = _flat_with_axes(storage, self._axes)
@@ -169,16 +177,21 @@ class TensorBackend(InferenceBackend):
                            slots: jax.Array, bt_rows: jax.Array) -> Dict:
         """Scatter one attention entry's wave prefill (ring layout, any
         cache length) into the pool by absolute position.  All leaves carry
-        a leading layer axis (callers expand tail entries to L=1)."""
+        a leading layer axis (callers expand tail entries to L=1).
+
+        The dense wave cache is per-row (``key_pos [L, W, C_d]``, ``pos
+        [L, W]``): after a masked prefill each row holds its own true
+        length, with pad slots at ``key_pos == -1`` — those scatter to the
+        scratch block and stay invisible."""
         c_pad = paged["key_pos"].shape[-1]
         bs = paged["k_pool"].shape[2]
         scratch = paged["k_pool"].shape[1] - 1
-        kp0 = dense["key_pos"][0]                       # [C_d] (layer-shared)
-        valid = kp0 >= 0
+        kp0 = dense["key_pos"][0]                       # [W, C_d] (layer-shared)
+        valid = kp0 >= 0                                # [W, C_d]
         ring = jnp.where(valid, kp0 % c_pad, 0)
-        blk, off = ring // bs, ring % bs
-        phys = bt_rows[:, blk]                          # [W, C_d]
-        tgt = jnp.where(valid[None, :] & (phys >= 0), phys, scratch)
+        blk, off = ring // bs, ring % bs                # [W, C_d]
+        phys = jnp.take_along_axis(bt_rows, blk, axis=1)  # [W, C_d]
+        tgt = jnp.where(valid & (phys >= 0), phys, scratch)
 
         out = dict(paged)
         pairs = [("k_pool", "k"), ("v_pool", "v")]
@@ -189,12 +202,15 @@ class TensorBackend(InferenceBackend):
             vals = dense[dense_key].astype(pool.dtype)  # [L, W, C_d, ...]
             out[pool_key] = pool.at[:, tgt, off].set(vals)
 
-        # per-slot ring view: key_pos row rebuilt at the paged ring length
+        # per-slot ring view: key_pos rows rebuilt at the paged ring length
+        # (index c_pad is the sacrificial column for invalid entries)
+        w = kp0.shape[0]
+        rows = jnp.arange(w)[:, None]
         safe = jnp.where(valid, ring, c_pad)
-        row = jnp.full((c_pad + 1,), -1, jnp.int32).at[safe].set(
-            jnp.where(valid, kp0, -1))[:c_pad]
-        out["key_pos"] = paged["key_pos"].at[:, slots].set(row[None, None, :])
-        out["pos"] = paged["pos"].at[:, slots].set(dense["pos"][:, None])
+        row = jnp.full((w, c_pad + 1), -1, jnp.int32).at[rows, safe].set(
+            jnp.where(valid, kp0, -1))[:, :c_pad]       # [W, c_pad]
+        out["key_pos"] = paged["key_pos"].at[:, slots].set(row[None])
+        out["pos"] = paged["pos"].at[:, slots].set(dense["pos"])
         out["bt"] = paged["bt"].at[:, slots].set(bt_rows[None])
         return out
 
@@ -220,17 +236,14 @@ class TensorBackend(InferenceBackend):
                         out[key] = self._scatter_one_paged(spec, d, s, idx,
                                                            bt_rows)
                 else:
-                    # dense per-slot state: batch leaves land at the wave's
-                    # slot rows; "pos" is batch-free in the dense layout but
-                    # per-slot [B] in the paged one
+                    # dense per-slot state: every leaf (pos included) leads
+                    # with the batch axis and lands at the wave's slot rows
                     if group == "stack":
                         e = {k: d[k].at[:, idx].set(s[k].astype(d[k].dtype))
-                             for k in d if k != "pos"}
-                        e["pos"] = d["pos"].at[:, idx].set(s["pos"][:, None])
+                             for k in d}
                     else:
                         e = {k: d[k].at[idx].set(s[k].astype(d[k].dtype))
-                             for k in d if k != "pos"}
-                        e["pos"] = d["pos"].at[idx].set(s["pos"])
+                             for k in d}
                     out[key] = e
             return out
 
@@ -266,20 +279,28 @@ class TensorBackend(InferenceBackend):
 
     # ------------------------------------------------------------------ #
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
+                prompt_lens: Optional[Sequence[int]] = None,
                 ) -> List[SlotEvent]:
         prompts = np.atleast_2d(np.asarray(prompts, np.int32))
         k = prompts.shape[0]
         assert len(slots) == k
+        lens = np.full(k, prompts.shape[1], np.int32) if prompt_lens is None \
+            else np.asarray(prompt_lens, np.int32)
+        assert lens.shape == (k,) and np.all(lens >= 1) \
+            and np.all(lens <= prompts.shape[1]), (lens, prompts.shape)
         if self._paged_exec:
             # atomic: on exhaustion nothing mutates and the scheduler can
-            # retry the wave after preempting
-            self.pager.realloc_wave(slots, prompts.shape[1])
+            # retry the wave after preempting.  Blocks cover each slot's
+            # TRUE length — pads are masked and never become cache keys.
+            self.pager.realloc_wave(slots, lens)
         # pad the wave to the full slot width by repeating the first entry
         # (duplicate scatter indices write identical values), so prefill and
         # scatter compile once instead of per admission-wave size
         pad = self.n_slots - k
         prompts_p = np.concatenate(
             [prompts, np.repeat(prompts[:1], pad, axis=0)]) if pad else prompts
+        lens_p = np.concatenate([lens, np.repeat(lens[:1], pad)]) \
+            if pad else lens
         slots_p = list(slots) + [slots[0]] * pad
         idx = jnp.asarray(slots_p, jnp.int32)
         if self._paged_exec:
@@ -291,18 +312,20 @@ class TensorBackend(InferenceBackend):
             bt_rows = jnp.asarray(self.pager.table[np.asarray(slots_p)])
             with use_mesh(self.mesh):
                 logits, new_caches, _ = self._prefill_fn(
-                    self.params, jnp.asarray(prompts_p), caches=fresh)
+                    self.params, jnp.asarray(prompts_p), caches=fresh,
+                    prompt_lens=jnp.asarray(lens_p))
                 self.caches = self._scatter_fn(self.caches, new_caches, idx,
                                                bt_rows)
-            for s in slots:
-                self._pos[s] = prompts.shape[1]
+            for s, n in zip(slots, lens):
+                self._pos[s] = int(n)
                 self._active[s] = True
         else:
             fresh = T.init_caches(self.cfg, self.n_slots, self.max_len,
                                   self.cache_dtype)
             with use_mesh(self.mesh):
                 logits, new_caches, _ = self._prefill_fn(
-                    self.params, jnp.asarray(prompts_p), caches=fresh)
+                    self.params, jnp.asarray(prompts_p), caches=fresh,
+                    prompt_lens=jnp.asarray(lens_p))
                 self.caches = self._scatter_fn(self.caches, new_caches, idx)
         last = np.asarray(logits[:, -1], np.float32)
         return [SlotEvent(slot=s, logits=last[i]) for i, s in enumerate(slots)]

@@ -1,12 +1,24 @@
 """Serving engine: batch-lockstep prefill + decode with sampling.
 
-``ServeEngine`` is the simple whole-batch generation path (one shared KV
-cache, one sampling params for the batch).  Production serving routes
-through ``serving.LLM`` over ``repro.runtime`` instead:
-``runtime.TensorBackend`` is this engine's execution path made slot-granular
-behind the backend protocol, and ``serving.ContinuousBatcher`` schedules
-requests over any backend — including the EdgeShard stage pipeline
-(``runtime.PipelineBackend``).
+.. deprecated::
+    ``ServeEngine`` is the legacy whole-batch generation path (one shared
+    KV cache, one sampling params for the batch, batch-lockstep stepping).
+    Use :class:`repro.serving.LLM` instead — it serves variable-length
+    prompts with masked (pad-neutral) bucketed admission, continuous
+    batching, streaming, and per-request sampling over any
+    ``repro.runtime`` backend.  This engine is retained for tests and
+    simple scripted generation over *uniform-length* batches.
+
+Pad semantics: callers that left-pad a mixed-length batch themselves must
+pass ``prompt_lens`` to :meth:`ServeEngine.prefill` / ``generate`` so pads
+are masked (same `forward(prompt_lens=...)` path the runtime backends
+use); otherwise pads are treated as real tokens and outputs depend on the
+padded width.
+
+``runtime.TensorBackend`` is this engine's execution path made
+slot-granular behind the backend protocol, and ``serving.ContinuousBatcher``
+schedules requests over any backend — including the EdgeShard stage
+pipeline (``runtime.PipelineBackend``).
 
 Request/SamplingParams live in ``serving.types`` (jax-free, importable by
 scheduler and server code without this module's model dependencies); they
@@ -61,13 +73,23 @@ class ServeEngine:
                                                  impl=impl))
 
     # ------------------------------------------------------------------ #
-    def prefill(self, prompts: jax.Array) -> Tuple[jax.Array, PyTree]:
-        """prompts [B, S] -> (next-token logits [B, V], caches)."""
+    def prefill(self, prompts: jax.Array, prompt_lens=None,
+                ) -> Tuple[jax.Array, PyTree]:
+        """prompts [B, S] -> (next-token logits [B, V], caches).
+
+        ``prompt_lens`` ([B] true lengths) marks ``prompts`` as
+        left-padded; pads are masked out (same semantics as the runtime
+        backends' bucketed prefill)."""
         b = prompts.shape[0]
         caches = T.init_caches(self.cfg, b, self.max_len, self.cache_dtype)
         with use_mesh(self.mesh):
-            logits, caches, _ = self._prefill(self.params, prompts,
-                                              caches=caches)
+            if prompt_lens is None:
+                logits, caches, _ = self._prefill(self.params, prompts,
+                                                  caches=caches)
+            else:
+                logits, caches, _ = self._prefill(
+                    self.params, prompts, caches=caches,
+                    prompt_lens=jnp.asarray(prompt_lens, jnp.int32))
         return logits[:, -1], caches
 
     def decode(self, tokens: jax.Array, caches: PyTree,
@@ -77,12 +99,16 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ #
     def generate(self, prompts: np.ndarray, sp: SamplingParams,
-                 seed: int = 0) -> np.ndarray:
-        """prompts [B, S] -> generated tokens [B, max_tokens]."""
+                 seed: int = 0, prompt_lens=None) -> np.ndarray:
+        """prompts [B, S] -> generated tokens [B, max_tokens].
+
+        Pass ``prompt_lens`` when ``prompts`` is left-padded (see
+        :meth:`prefill`)."""
         b = prompts.shape[0]
         assert b <= self.max_batch
         key = jax.random.PRNGKey(seed)
-        logits, caches = self.prefill(jnp.asarray(prompts, jnp.int32))
+        logits, caches = self.prefill(jnp.asarray(prompts, jnp.int32),
+                                      prompt_lens=prompt_lens)
         out = np.zeros((b, sp.max_tokens), np.int32)
         key, sub = jax.random.split(key)
         tok = sample_logits(sub, logits, sp)

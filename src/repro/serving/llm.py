@@ -17,8 +17,10 @@ Three ways to drive it, all over the same :class:`ContinuousBatcher`:
   requests join mid-flight between steps, and completion is polled per
   request instead of draining the world.
 
-Prompts keep their natural length; the batcher pads per length bucket, so
-callers never pad and mixed-length prompts share one continuous batch.
+Prompts keep their natural length; the batcher pads per length bucket
+(*masked* — pads are semantically invisible, so outputs are identical for
+any bucket size and to an unpadded run), callers never pad, and
+mixed-length prompts share one continuous batch.
 """
 from __future__ import annotations
 
@@ -60,7 +62,7 @@ def _params_for(params, n: int) -> List[SamplingParams]:
 class LLM:
     """Streaming serving facade over one :class:`InferenceBackend`."""
 
-    def __init__(self, backend, *, seed: int = 0, min_bucket: int = 8,
+    def __init__(self, backend, *, seed: int = 0, min_bucket: int = 1,
                  pad_id: int = 0):
         self.batcher = ContinuousBatcher(backend, seed=seed,
                                          min_bucket=min_bucket, pad_id=pad_id)
@@ -81,7 +83,7 @@ class LLM:
                   params=None, mesh=None, n_slots: Optional[int] = None,
                   lanes: int = 1, max_len: int = 256, cache_dtype=None,
                   schedule: str = "nobubbles", impl: str = "xla",
-                  seed: int = 0, min_bucket: int = 8, pad_id: int = 0,
+                  seed: int = 0, min_bucket: int = 1, pad_id: int = 0,
                   cache_layout: str = "contiguous", block_size: int = 16,
                   num_blocks: Optional[int] = None,
                   ) -> "LLM":

@@ -24,12 +24,15 @@ and left-pads each wave to its bucket, so the backend sees a bounded set of
 XLA prefill shapes and the last prompt position always holds the last real
 token.
 
-Padding semantics: pad tokens are fed to the model unmasked (the runtime's
-prefill has no attention-mask input yet), so a request's output is a
-deterministic function of (prompt, bucket size) — identical across
-backends, submission orders, and batch compositions, but not identical to
-the unpadded continuation unless the prompt exactly fills its bucket.
-Masked prefill to make bucketing semantically neutral is a ROADMAP item.
+Padding semantics: bucketing is **semantically neutral**.  Every
+``prefill`` call carries the wave's true prompt lengths and the backend
+masks the pads (``prompt_lens`` in the backend protocol): pad tokens never
+enter attention, never become valid KV-cache keys, and real tokens keep
+their exact unpadded positions — so a request's output is a function of
+its prompt alone, identical across bucket sizes (``min_bucket`` is purely
+a compile-shape/throughput knob, default 1) and identical to an unpadded
+exact-length run.  Capacity checks accordingly use the *true* prompt
+length, not the padded bucket.
 """
 from __future__ import annotations
 
@@ -110,7 +113,7 @@ class ContinuousBatcher:
     slots decode them.
     """
 
-    def __init__(self, backend, seed: int = 0, *, min_bucket: int = 8,
+    def __init__(self, backend, seed: int = 0, *, min_bucket: int = 1,
                  pad_id: int = 0,
                  on_token: Optional[Callable[[TokenEvent], None]] = None,
                  reserve_blocks: Optional[int] = None):
@@ -137,8 +140,7 @@ class ContinuousBatcher:
         self.step_no = 0
         self._uids: Set[int] = set()
         # preemption/resume bookkeeping (paged overcommit)
-        self._resume: Dict[int, np.ndarray] = {}   # uid -> exact re-prefill
-        self._bucket_len: Dict[int, int] = {}      # uid -> original bucket
+        self._resume: Dict[int, np.ndarray] = {}   # uid -> unpadded prefix
         self._admit_seq: Dict[int, int] = {}       # uid -> admission order
         self._n_admitted = 0
 
@@ -169,22 +171,24 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.uid}: prompt length {plen} exceeds the "
                 f"backend's max_len {max_len}")
-        if self._bucket(plen) + req.params.max_tokens - 1 > max_len:
+        if plen + req.params.max_tokens - 1 > max_len:
             # past max_len, KV writes clamp/drop silently and every later
-            # token is computed against a corrupted cache — reject up front
+            # token is computed against a corrupted cache — reject up front.
+            # Masked prefill means pads never occupy cache positions, so
+            # the check uses the TRUE prompt length, not the padded bucket:
+            # requests near the context limit stay admissible.
             raise ValueError(
-                f"request {req.uid}: padded prompt ({self._bucket(plen)}) + "
-                f"max_tokens ({req.params.max_tokens}) overflows the "
-                f"backend's cache (max_len {max_len}); lower max_tokens to "
-                f"<= {max_len - self._bucket(plen) + 1} or serve with a "
-                f"larger max_len")
+                f"request {req.uid}: prompt length ({plen}) + max_tokens "
+                f"({req.params.max_tokens}) overflows the backend's cache "
+                f"(max_len {max_len}); lower max_tokens to "
+                f"<= {max_len - plen + 1} or serve with a larger max_len")
         info = self.backend.info
         if info.paged:
             # worst case this one request can ever hold (the final sampled
             # token is never written back); a pool smaller than that
             # deadlocks — preempting everyone else still can't fit it
             worst = info.blocks_for_len(
-                min(self._bucket(plen) + req.params.max_tokens - 1, max_len))
+                min(plen + req.params.max_tokens - 1, max_len))
             if worst > info.total_blocks:
                 raise ValueError(
                     f"request {req.uid}: needs up to {worst} KV blocks but "
@@ -267,7 +271,8 @@ class ContinuousBatcher:
         """Pull the next admission wave: FIFO head plus every queued request
         sharing its length bucket, up to the free-slot capacity (or the
         tighter paged block-budget ``cap``).  Resumed requests never join a
-        wave here — the caller admits them singleton with an exact shape."""
+        wave here — the caller admits them singleton (their prefix includes
+        generated tokens), bucketed through the same shapes."""
         cap = len(self._free) if cap is None else cap
         blen = self._bucket(len(self.queue[0].prompt))
         wave: List[Request] = []
@@ -287,19 +292,18 @@ class ContinuousBatcher:
     # ------------------------------------------------------------------ #
     def _preempt(self, slot: int) -> None:
         """Evict the request in ``slot``: free its blocks and requeue it at
-        the queue head with an exact re-prefill prefix — the *original
-        padded prompt layout* plus everything generated so far, so the
-        recomputed KV (and every later token) is identical to an
-        uninterrupted run."""
+        the queue head with its re-prefill prefix — the prompt plus
+        everything generated so far, *unpadded*.  Masked prefill makes
+        padding invisible, so on resume the prefix is simply re-bucketed
+        like any fresh prompt and the recomputed KV (and every later token)
+        is identical to an uninterrupted run."""
         req = self._slot_req.pop(slot)
         self.backend.free_slot(slot)
         self._feeds.pop(slot, None)
         self._free.append(slot)
-        blen = self._bucket_len[req.uid]
-        prefix = np.full(blen + len(req.generated), self.pad_id, np.int32)
-        prefix[blen - len(req.prompt):blen] = req.prompt
-        prefix[blen:] = req.generated
-        self._resume[req.uid] = prefix
+        self._resume[req.uid] = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.generated, np.int32)])
         self.queue.appendleft(req)
         req.timing.preemptions += 1
         self.stats.preemptions += 1
@@ -348,7 +352,6 @@ class ContinuousBatcher:
                 self.done[req.uid] = req
                 self.stats.served += 1
                 self._keys.pop(req.uid, None)
-                self._bucket_len.pop(req.uid, None)
                 self._admit_seq.pop(req.uid, None)
                 self.backend.free_slot(ev.slot)
                 del self._slot_req[ev.slot]
@@ -390,19 +393,27 @@ class ContinuousBatcher:
         while self.queue and self._free:
             head = self.queue[0]
             if head.uid in self._resume:
-                # resumed requests re-prefill their exact padded prefix
-                # (prompt layout + generated tokens) as a singleton wave
-                plen = len(self._resume[head.uid])
+                # resumed requests re-prefill their prefix (prompt +
+                # generated tokens) as a singleton wave, bucketed through
+                # the same power-of-two shapes as fresh admissions — masked
+                # prefill makes the padding invisible, so resumes no longer
+                # compile one fresh XLA prefill shape per exact length
+                prefix = self._resume[head.uid]
+                plen = len(prefix)
+                blen = self._bucket(plen)
                 need = info.blocks_for_len(plen)
                 if budget is not None and need > budget:
                     break
                 req = self.queue.popleft()
-                wave, blen = [req], plen
-                padded = self._resume.pop(req.uid)[None, :]
+                wave, lens = [req], [plen]
+                padded = np.full((1, blen), self.pad_id, np.int32)
+                padded[0, blen - plen:] = prefix
                 resumed = True
             else:
                 resumed = False
                 blen = self._bucket(len(head.prompt))
+                # cap the wave by the bucket's worst-case block demand
+                # (true-length demand, summed below, can only be smaller)
                 need_each = info.blocks_for_len(blen)
                 cap = len(self._free)
                 if budget is not None:
@@ -413,30 +424,32 @@ class ContinuousBatcher:
                 blen, wave = self._next_wave(cap)
                 if not wave:                    # defensive: never expected
                     break
-                need = need_each * len(wave)
+                lens = [len(r.prompt) for r in wave]
+                need = sum(info.blocks_for_len(n) for n in lens)
                 padded = np.full((len(wave), blen), self.pad_id, np.int32)
                 for i, req in enumerate(wave):
                     padded[i, blen - len(req.prompt):] = req.prompt
             slots = [self._free.popleft() for _ in wave]
             try:
-                events = self.backend.prefill(slots, padded)
+                events = self.backend.prefill(slots, padded,
+                                              prompt_lens=lens)
             except PoolExhausted:
                 # the lazy-allocating pipeline can reach here despite the
-                # budget gate; put everything back and let decode drain
+                # budget gate; put everything back (a resumed request keeps
+                # its _resume prefix — it is only dropped on success) and
+                # let decode drain
                 for s in reversed(slots):
                     self._free.appendleft(s)
                 for r in reversed(wave):
                     self.queue.appendleft(r)
-                if len(wave) == 1 and wave[0].timing.preemptions and \
-                        wave[0].uid not in self._resume:
-                    self._resume[wave[0].uid] = padded[0]   # singleton resume
                 break
+            if resumed:
+                del self._resume[wave[0].uid]
             now = time.perf_counter()
             for slot, req in zip(slots, wave):
                 self._slot_req[slot] = req
                 req.timing.admit_step = self.step_no
                 req.timing.admitted_s = now
-                self._bucket_len.setdefault(req.uid, blen)
                 self._n_admitted += 1
                 self._admit_seq[req.uid] = self._n_admitted
             self.stats.prefills += 1

@@ -71,17 +71,40 @@ def make_backend(kind: str, layout: str, n_slots: int = 3):
     raise ValueError(kind)
 
 
-def serve_prompts(backend, prompts, uids=None, gen=GEN, seed=0):
+def serve_prompts(backend, prompts, uids=None, gen=GEN, seed=0,
+                  min_bucket=1, return_batcher=False):
     """Greedy-serve prompts; returns {uid: tokens}."""
     from repro.serving import ContinuousBatcher, Request, SamplingParams
-    b = ContinuousBatcher(backend, seed=seed)
+    b = ContinuousBatcher(backend, seed=seed, min_bucket=min_bucket)
     uids = uids if uids is not None else list(range(len(prompts)))
     for uid, p in zip(uids, prompts):
         b.submit(Request(np.asarray(p, np.int32),
                          SamplingParams(max_tokens=gen), uid=uid))
     done = b.run()
     assert sorted(done) == sorted(uids)
-    return {u: done[u].generated for u in uids}
+    out = {u: done[u].generated for u in uids}
+    return (out, b) if return_batcher else out
+
+
+def greedy_exact(backend, prompt, gen=GEN):
+    """Unbatched exact-length serial reference: drive the backend directly
+    with an unpadded single prompt (no batcher, no bucketing, no pads)."""
+    toks, feeds = [], {}
+
+    def absorb(evs):
+        for ev in evs:
+            toks.append(int(np.argmax(ev.logits)) if ev.logits is not None
+                        else int(ev.token))
+            feeds[0] = toks[-1]
+
+    absorb(backend.prefill([0], np.asarray(prompt, np.int32)[None, :]))
+    for _ in range(100 * gen):              # pipelined backends skew
+        if len(toks) >= gen:
+            break
+        absorb(backend.decode_step(feeds))
+    assert len(toks) >= gen, toks
+    backend.free_slot(0)
+    return toks[:gen]
 
 
 KINDS = [("tensor", "contiguous"), ("tensor", "paged"),
@@ -243,3 +266,147 @@ def test_tensor_determinism_under_slot_permutation(layout):
     order = [3, 1, 4, 0, 2]
     b = serve_prompts(backend_b, [prompts[u] for u in order], uids=order)
     assert a == b
+
+
+# --------------------------------------------------------------------------- #
+# bucket invariance: pad tokens must not change outputs (acceptance criterion)
+# --------------------------------------------------------------------------- #
+
+BUCKET_LENS = (1, 3, 5, 8, 13)      # crosses buckets 1/2/4/8/16 at min_bucket=1
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_tensor_bucket_invariance(layout):
+    """Masked prefill makes length bucketing semantically neutral: the same
+    prompts produce token-identical outputs for min_bucket in {1, 8, 64}
+    (64 > max_len exercises the bucket cap) AND match an unbatched
+    exact-length serial run with no padding at all."""
+    rng = np.random.default_rng(6)
+    cfg, _ = make_backend("tensor", layout)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in BUCKET_LENS]
+    runs = {}
+    for mb in (1, 8, 64):
+        _, backend = make_backend("tensor", layout)
+        runs[mb], b = serve_prompts(backend, prompts, min_bucket=mb,
+                                    return_batcher=True)
+        floor = min(mb, MAX_LEN)
+        assert all(s >= floor for s in b.stats.prefill_shapes), \
+            (mb, b.stats.prefill_shapes)
+    assert runs[1] == runs[8] == runs[64], runs
+    assert len(np.unique([t for ts in runs[1].values() for t in ts])) > 2, \
+        "degenerate reference"
+    # exact-length unpadded serial reference, one request at a time
+    for uid, p in enumerate(prompts):
+        _, backend = make_backend("tensor", layout, n_slots=1)
+        assert greedy_exact(backend, p) == runs[1][uid], uid
+
+
+def test_tensor_submit_accepts_request_near_context_limit():
+    """Regression: the submit-time capacity check must use the TRUE prompt
+    length, not the padded bucket — a prompt whose unpadded length +
+    max_tokens fits max_len exactly is admissible and serves fully."""
+    from repro.serving import ContinuousBatcher, Request, SamplingParams
+    cfg, backend = make_backend("tensor", "contiguous", n_slots=1)
+    rng = np.random.default_rng(8)
+    plen, gen = MAX_LEN - GEN + 1, GEN          # plen + gen - 1 == max_len
+    assert (1 << (plen - 1).bit_length()) + gen - 1 > MAX_LEN, \
+        "the padded bucket would overflow: the old check rejected this"
+    b = ContinuousBatcher(backend)
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    b.submit(Request(prompt, SamplingParams(max_tokens=gen), uid=0))
+    done = b.run()
+    assert len(done[0].generated) == gen
+    assert done[0].finish_reason == "length"
+
+
+def test_pipeline_bucket_invariance():
+    """Bucket invariance on the no-bubbles pipeline (pads are stripped at
+    admission): min_bucket in {1, 8, 64} identical, equal to TensorBackend
+    and to the unbatched exact-length serial run (subprocess: devices)."""
+    run_subprocess("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core import pipeline as PL
+from repro.models import transformer as T
+from repro.runtime import PipelineBackend, TensorBackend
+from repro.serving import ContinuousBatcher, Request, SamplingParams
+
+cfg = get_config("qwen3-0.6b").reduced(n_layers=4)
+params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+spec = PL.even_pipeline_spec(cfg, 2)
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+lens = (1, 3, 5, 8, 13)
+prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in lens]
+
+def serve(be, min_bucket):
+    b = ContinuousBatcher(be, min_bucket=min_bucket)
+    for uid, p in enumerate(prompts):
+        b.submit(Request(p, SamplingParams(max_tokens=5), uid=uid))
+    done = b.run()
+    return [done[u].generated for u in range(len(prompts))]
+
+def pipe(layout):
+    return lambda mb: serve(PipelineBackend(
+        cfg, params, spec, mesh, n_slots=3, max_len=32,
+        cache_layout=layout), mb)
+
+for layout in ("contiguous", "paged"):
+    runs = {mb: pipe(layout)(mb) for mb in (1, 8, 64)}
+    assert runs[1] == runs[8] == runs[64], (layout, runs)
+
+tens = serve(TensorBackend(cfg, params, n_slots=3, max_len=32), 1)
+assert tens == pipe("contiguous")(1), "pipeline != tensor under min_bucket=1"
+
+# unbatched exact-length serial reference over the pipeline itself
+be = PipelineBackend(cfg, params, spec, mesh, n_slots=2, max_len=32)
+for uid, p in enumerate(prompts):
+    toks, feeds = [], {}
+    def absorb(evs):
+        for ev in evs:
+            toks.append(int(ev.token)); feeds[0] = toks[-1]
+    absorb(be.prefill([0], p[None, :]))
+    while len(toks) < 5:
+        absorb(be.decode_step(feeds))
+    be.free_slot(0)
+    assert toks[:5] == tens[uid], (uid, toks, tens[uid])
+print("bucket invariance OK")
+""")
+
+
+def test_preempt_resume_across_bucket_boundary():
+    """Preempt -> resume where the resume prefix crosses a power-of-two
+    bucket boundary: outputs still match an uninterrupted contiguous run,
+    and every resume prefill shape is a shared bucket (no per-length XLA
+    shapes — the ROADMAP follow-up unlocked by masked prefill)."""
+    from repro.serving import ContinuousBatcher, Request, SamplingParams
+    rng = np.random.default_rng(9)
+    cfg, ref_backend = make_backend("tensor", "contiguous")
+    # prompts of length 6 (bucket 8) generating 12 tokens: any preemption
+    # after 3 generated tokens resumes with a prefix in bucket 16
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(5)]
+    ref = {}
+    for uid, p in enumerate(prompts):       # serial uninterrupted reference
+        _, be = make_backend("tensor", "contiguous", n_slots=1)
+        ref[uid] = greedy_exact(be, p, gen=12)
+    import jax
+    from repro.models import transformer as T
+    from repro.runtime import TensorBackend
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    # 8-token blocks: the first boundary falls at position 8, so a length-6
+    # (bucket-8) request preempted there resumes with a 9..16-token prefix
+    # — squarely in the NEXT bucket (16)
+    backend = TensorBackend(cfg, params, n_slots=3, max_len=MAX_LEN,
+                            cache_layout="paged", block_size=8, num_blocks=4)
+    outs, b = serve_prompts(backend, prompts, gen=12, return_batcher=True)
+    assert b.stats.preemptions > 0 and b.stats.resumes > 0, \
+        "a 4-block pool under this demand must preempt"
+    assert outs == ref
+    pow2_or_cap = {1 << i for i in range(12)} | {MAX_LEN}
+    assert set(b.stats.prefill_shapes) <= pow2_or_cap, \
+        f"resume prefills must reuse bucketed shapes: {b.stats.prefill_shapes}"
+    assert 8 in b.stats.prefill_shapes and 16 in b.stats.prefill_shapes, \
+        f"expected a resume crossing the 8->16 bucket boundary: " \
+        f"{b.stats.prefill_shapes}"

@@ -54,8 +54,11 @@ class FakeBackend(InferenceBackend):
         out[tok] = 1.0
         return out
 
-    def prefill(self, slots, prompts) -> List[SlotEvent]:
+    def prefill(self, slots, prompts, prompt_lens=None) -> List[SlotEvent]:
         assert prompts.ndim == 2 and prompts.shape[0] == len(slots)
+        if prompt_lens is not None:        # scheduler passes true lengths
+            assert len(prompt_lens) == len(slots)
+            assert all(1 <= n <= prompts.shape[1] for n in prompt_lens)
         for s in slots:
             self._count[s] = 0
         return [SlotEvent(slot=s, logits=self._logits(s)) for s in slots]
@@ -212,12 +215,17 @@ def test_submit_rejects_oversized_and_empty_prompts():
         b.submit(Request(np.arange(17)))
     with pytest.raises(ValueError, match="empty"):
         b.submit(Request(np.zeros(0, np.int32)))
-    # padded prompt + max_tokens overflowing the KV cache would silently
+    # true prompt + max_tokens overflowing the KV cache would silently
     # corrupt every token past max_len — rejected up front instead
     with pytest.raises(ValueError, match="overflows"):
-        b.submit(Request(np.arange(3),              # bucket 8
+        b.submit(Request(np.arange(6),              # 6 + 12 - 1 = 17 > 16
                          SamplingParams(max_tokens=12)))
-    b.submit(Request(np.arange(3), SamplingParams(max_tokens=9)))  # fits
+    # the check uses the TRUE length, not the padded bucket: a request that
+    # fits unpadded is admissible even when bucket + max_tokens would not be
+    b.submit(Request(np.arange(3),                  # bucket 4; 3+12-1 <= 16
+                     SamplingParams(max_tokens=12)))
+    b.submit(Request(np.arange(14),                 # 14 + 3 - 1 == 16: fits
+                     SamplingParams(max_tokens=3)))
 
 
 # --------------------------------------------------------------------------- #
@@ -287,11 +295,23 @@ def test_variable_length_prompts_one_batch():
     assert [o.n_prompt for o in outs] == [3, 5, 9, 12, 2]
     assert all(o.n_generated == 4 for o in outs)
     # bucketed admission: every prefill shape is a power-of-two bucket
-    assert set(llm.stats.prefill_shapes) <= {8, 16}
+    # (min_bucket defaults to 1 now that masked prefill is pad-neutral)
+    assert set(llm.stats.prefill_shapes) <= {2, 4, 8, 16}
     # determinism: the length-5 prompt served alone yields identical tokens
     _, solo = _tiny_llm(n_slots=3)
     [ref] = solo.generate([prompts[1]], SamplingParams(max_tokens=4))
     assert ref.tokens == outs[1].tokens
+    # pad-neutrality: a coarser bucket floor pads the same prompt wider yet
+    # produces identical tokens (pads are masked, not fed)
+    from repro.runtime import TensorBackend
+    import jax
+    from repro.models import transformer as T
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    wide = LLM.from_backend(TensorBackend(cfg, params, n_slots=3, max_len=64),
+                            min_bucket=16)
+    [w] = wide.generate([prompts[1]], SamplingParams(max_tokens=4))
+    assert set(wide.stats.prefill_shapes) == {16}
+    assert w.tokens == outs[1].tokens
 
 
 def test_sampling_determinism_under_reordering():
