@@ -1,15 +1,29 @@
-"""Single-token GQA decode attention over a (ring-buffer) KV cache.
+"""Single-token GQA decode attention over a (ring-buffer or paged) KV cache.
 
 The decode hot spot: one query row per sequence against a cache of up to
-524288 keys (``long_500k``).  Grid ``(batch, q_heads, num_kv_blocks)`` with
-online-softmax state in VMEM scratch; the kv axis is innermost so the cache
-streams HBM->VMEM block by block — the kernel is memory-bound by design and
-its roofline is the cache-read term.
+524288 keys (``long_500k``).  Grid ``(batch, kv_heads, num_kv_blocks)``
+with online-softmax state in VMEM scratch; the kv axis is innermost so the
+cache streams HBM->VMEM block by block.  Every q head of a kv head's GQA
+group rides in the same grid step (query block ``[g, d]``), so each cache
+block is DMA'd exactly **once** per decode step — a per-q-head grid would
+re-stream the cache ``h/kh`` times and forfeit the memory-roofline win the
+kernel exists for.
+
+Two cache layouts share the same kernel body:
+
+- :func:`decode_attention_bhd` — contiguous ring buffers ``[B, C, KH, D]``,
+- :func:`paged_decode_attention_bhd` — a shared block pool
+  ``[NB+1, bs, KH, D]`` read *through the slot's block table*: the table is
+  scalar-prefetched and drives the kv ``BlockSpec`` index map, so block
+  ``ib`` of slot ``b`` streams pool block ``bt[b, ib]`` HBM->VMEM directly.
+  This is the vLLM-style fused indirection — no ``[B, C_pad, KH, D]``
+  gather temporary exists, killing the per-step full-cache materialization
+  the XLA paged path pays for.
 
 Slot validity/window masking is precomputed by the wrapper into a boolean
 ``mask [1, C]`` — or ``[B, C]`` when rows decode at their own positions
-(masked length-bucketed prefill) — since ring buffers make validity
-position- not index-monotonic.
+(masked length-bucketed prefill; always per-row for the paged kernel) —
+since ring buffers make validity position- not index-monotonic.
 """
 from __future__ import annotations
 
@@ -27,6 +41,12 @@ NEG_INF = -1e30
 
 def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref,
                    acc_ref, *, scale: float, softcap: Optional[float]):
+    """Online-softmax decode over one (batch row, kv head)'s cache blocks.
+
+    Block shapes: q/o ``[1, g, d]`` (the kv head's whole GQA query group),
+    k/v ``[1, bc, 1, d]``, mask ``[1, bc]``; scratch m/l ``[g, 1]``, acc
+    ``[g, d]`` persist across the innermost (kv-block) grid axis.
+    """
     ic = pl.program_id(2)
     nc = pl.num_programs(2)
 
@@ -36,12 +56,12 @@ def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                             # [1, d]
+    q = q_ref[0].astype(jnp.float32)                             # [g, d]
     k = k_ref[0, :, 0].astype(jnp.float32)                       # [bc, d]
     v = v_ref[0, :, 0].astype(jnp.float32)
     mask = mask_ref[0]                                           # [bc]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [1, bc]
+                            preferred_element_type=jnp.float32)  # [g, bc]
     s = s * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
@@ -58,8 +78,18 @@ def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref,
 
     @pl.when(ic == nc - 1)
     def _finish():
+        # a fully-masked row (idle paged slot: every key_pos == -1) keeps
+        # l at 0; the clamp yields exact zeros instead of NaN
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(bt_ref, *refs, scale: float,
+                         softcap: Optional[float]):
+    """``bt_ref`` (the scalar-prefetched block table) is consumed by the kv
+    BlockSpec index map, not the body — which is exactly the dense one."""
+    del bt_ref
+    _decode_kernel(*refs, scale=scale, softcap=softcap)
 
 
 def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -75,20 +105,24 @@ def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     b, h, d = q.shape
     c, kh = k.shape[1], k.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh                  # GQA group: q heads sharing one kv head
     assert c % block_c == 0, (c, block_c)
     assert mask.shape[0] in (1, b), mask.shape
     scale = 1.0 / math.sqrt(d)
-    grid = (b, h, c // block_c)
+    grid = (b, kh, c // block_c)
     shared_mask = mask.shape[0] == 1
 
-    q_spec = pl.BlockSpec((1, 1, d), lambda b_, h_, ic: (b_, h_, 0))
+    # q heads j*g..(j+1)*g-1 attend kv head j (the _sdpa grouping), so one
+    # grid step handles the whole group and each cache block is read once
+    q_spec = pl.BlockSpec((1, g, d), lambda b_, j, ic: (b_, j, 0))
     kv_spec = pl.BlockSpec((1, block_c, 1, d),
-                           lambda b_, h_, ic: (b_, ic, h_ * kh // h, 0))
+                           lambda b_, j, ic: (b_, ic, j, 0))
     mask_spec = pl.BlockSpec(
         (1, block_c),
-        (lambda b_, h_, ic: (0, ic)) if shared_mask
-        else (lambda b_, h_, ic: (b_, ic)))
-    out_spec = pl.BlockSpec((1, 1, d), lambda b_, h_, ic: (b_, h_, 0))
+        (lambda b_, j, ic: (0, ic)) if shared_mask
+        else (lambda b_, j, ic: (b_, ic)))
+    out_spec = pl.BlockSpec((1, g, d), lambda b_, j, ic: (b_, j, 0))
 
     kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap)
     return pl.pallas_call(
@@ -98,9 +132,64 @@ def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),       # m
-            pltpu.VMEM((1, 1), jnp.float32),       # l
-            pltpu.VMEM((1, d), jnp.float32),       # acc
+            pltpu.VMEM((g, 1), jnp.float32),       # m
+            pltpu.VMEM((g, 1), jnp.float32),       # l
+            pltpu.VMEM((g, d), jnp.float32),       # acc
         ],
         interpret=interpret,
     )(q, k, v, mask)
+
+
+def paged_decode_attention_bhd(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, bt: jax.Array,
+                               mask: jax.Array, *,
+                               softcap: Optional[float] = None,
+                               interpret: bool = False) -> jax.Array:
+    """Paged GQA decode: q [B,H,D]; pools [NB+1, bs, KH, D] (last block =
+    scratch); bt [B, nbs] int32 *physical* block ids (must be pre-clipped
+    in-bounds — the wrapper maps unallocated ``-1`` entries to the scratch
+    block, whose keys the mask hides); mask [B, nbs*bs] bool (True = attend,
+    carrying ring validity + causality + window per slot).
+
+    Returns [B, H, D].  Grid ``(batch, kv_heads, blocks_per_slot)``: the
+    block table is scalar-prefetched and indexes the kv BlockSpec directly,
+    and the kv head's whole GQA query group shares the grid step — so each
+    pool block is DMA'd exactly once and the slot's cache streams HBM->VMEM
+    once per decode step, with no gathered ``[B, C_pad, KH, D]``
+    intermediate ever materialized.
+    """
+    b, h, d = q.shape
+    bs, kh = k_pool.shape[1], k_pool.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    nbs = bt.shape[1]
+    assert bt.shape == (b, nbs), bt.shape
+    assert mask.shape == (b, nbs * bs), (mask.shape, b, nbs, bs)
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, kh, nbs)
+
+    q_spec = pl.BlockSpec((1, g, d), lambda b_, j, ib, bt_: (b_, j, 0))
+    kv_spec = pl.BlockSpec(
+        (1, bs, 1, d),
+        lambda b_, j, ib, bt_: (bt_[b_, ib], 0, j, 0))
+    mask_spec = pl.BlockSpec((1, bs), lambda b_, j, ib, bt_: (b_, ib))
+    out_spec = pl.BlockSpec((1, g, d), lambda b_, j, ib, bt_: (b_, j, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, mask_spec],
+        out_specs=out_spec,
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),       # m
+            pltpu.VMEM((g, 1), jnp.float32),       # l
+            pltpu.VMEM((g, d), jnp.float32),       # acc
+        ])
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(bt, q, k_pool, v_pool, mask)

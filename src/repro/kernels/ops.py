@@ -12,7 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.decode_attention import (decode_attention_bhd,
+                                            paged_decode_attention_bhd)
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.int8_matmul import int8_matmul_pallas, quantize_int8
 from repro.kernels.rglru_scan import rglru_scan_pallas
@@ -85,6 +86,40 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           bt: jax.Array, key_pos: jax.Array, pos: jax.Array,
+                           *, window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Paged decode through the block table — no gathered cache temporary.
+
+    q [B,1,H,D] or [B,H,D]; k_pool/v_pool [NB+1, bs, KH, D] (last block =
+    scratch); bt [B, nbs] int32 block table (-1 = unmapped, redirected to
+    the scratch block whose keys the validity mask hides); key_pos [B, C]
+    per-ring-slot absolute positions (-1 = empty, C == nbs*bs); pos [B]
+    per-slot decode positions.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    q3 = q[:, 0] if q.ndim == 4 else q
+    b = q3.shape[0]
+    nbs = bt.shape[1]
+    scratch = k_pool.shape[0] - 1
+    assert key_pos.shape == (b, nbs * k_pool.shape[1]), \
+        (key_pos.shape, bt.shape, k_pool.shape)
+    # validity is position-driven, exactly like the contiguous decode mask
+    mask = (key_pos >= 0) & (key_pos <= pos[:, None])
+    if window is not None:
+        mask &= key_pos > pos[:, None] - window
+    bt_read = jnp.where(bt >= 0, bt, scratch).astype(jnp.int32)
+    out = paged_decode_attention_bhd(q3, k_pool, v_pool, bt_read, mask,
+                                     softcap=softcap, interpret=interpret)
+    if q.ndim == 4:
+        return out[:, None]
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
 def rglru_scan(log_a: jax.Array, b: jax.Array,
                h0: Optional[jax.Array] = None, *, block_r: int = 128,
@@ -127,5 +162,5 @@ def int8_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
     return y[:m, :n].reshape(*lead, n)
 
 
-__all__ = ["flash_attention", "decode_attention", "rglru_scan", "int8_matmul",
-           "quantize_int8"]
+__all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
+           "rglru_scan", "int8_matmul", "quantize_int8"]

@@ -10,7 +10,8 @@ and never pads a prompt:
   uneven) stage plan as a running no-bubbles pipeline in one call.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --mode tp --batch 4 --gen 16 [--kvint8] [--stream] [--varlen]
+        --mode tp --batch 4 --gen 16 [--kvint8] [--stream] [--varlen] \
+        [--cache-layout paged --impl pallas]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode pipeline --stages 4            # devices default to --stages
 """
@@ -47,6 +48,12 @@ def main():
                          "tables over a shared pool (vLLM-style)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (paged layout)")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "chunked", "pallas"],
+                    help="attention implementation: pure-jnp reference, "
+                         "chunked online-softmax prefill, or the Pallas "
+                         "kernels (paged decode fuses the block-table "
+                         "indirection; interpreted on CPU, compiled on TPU)")
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="shared pool size in blocks; 0 = worst-case "
                          "provisioning (no overcommit).  Smaller pools "
@@ -104,8 +111,8 @@ def main():
             mesh = jax.make_mesh((1, args.devices), ("data", "model"))
         llm = LLM.from_backend(runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
-            max_len=args.max_len, mesh=mesh, **kv_kw), seed=args.seed,
-            min_bucket=args.min_bucket)
+            max_len=args.max_len, mesh=mesh, impl=args.impl, **kv_kw),
+            seed=args.seed, min_bucket=args.min_bucket)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -119,7 +126,7 @@ def main():
                      dtype_bytes=2),
             objective="throughput", kind="pipeline", params=params,
             n_slots=args.slots or None, max_len=args.max_len, seed=args.seed,
-            min_bucket=args.min_bucket, **kv_kw)
+            min_bucket=args.min_bucket, impl=args.impl, **kv_kw)
         n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "

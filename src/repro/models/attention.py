@@ -12,7 +12,11 @@ the softmax and written with ``key_pos == -1``, so the output for real
 tokens (and every later decode step) is independent of the padded width.
 
 ``impl="xla"`` is the pure-jnp reference; ``impl="pallas"`` dispatches the
-flash-attention Pallas kernel for the full-sequence path (prefill hot spot).
+Pallas kernels — flash attention for the full-sequence path (prefill hot
+spot), the streaming decode kernel for :func:`attend_decode`, and the
+block-table-fused paged kernel for :func:`attend_decode_paged`.  Decode
+paths raise on unknown ``impl`` values (``DECODE_IMPLS``) instead of
+silently running the XLA math.
 """
 from __future__ import annotations
 
@@ -28,6 +32,17 @@ from repro.models.layers import (ParamBuilder, apply_rope, rms_norm_headwise,
 from repro.sharding.rules import logical_constraint
 
 NEG_INF = -2.0 ** 30
+
+#: decode-path implementations: "xla" (masked-sdpa reference), "chunked"
+#: (alias — chunking is a prefill lever; one-token decode runs the same
+#: sdpa math), "pallas" (streaming online-softmax kernel).
+DECODE_IMPLS = ("xla", "chunked", "pallas")
+
+
+def _check_decode_impl(impl: str) -> None:
+    if impl not in DECODE_IMPLS:
+        raise ValueError(
+            f"unknown decode impl {impl!r}: expected one of {DECODE_IMPLS}")
 
 
 def init_attention(pb: ParamBuilder, name: str, cfg: ModelConfig):
@@ -274,6 +289,7 @@ def attend_decode(params: Dict, cfg: ModelConfig, spec: BlockSpec,
     (length-bucketed) prefill each row sits at its own true position, so
     every row writes and attends its own ring independently.
     """
+    _check_decode_impl(impl)
     b = x.shape[0]
     pos = cache["pos"]                                           # [B]
     positions = pos[:, None]                                     # [B, 1]
@@ -332,19 +348,28 @@ def attend_decode_paged(params: Dict, cfg: ModelConfig, spec: BlockSpec,
     - **shared** (``pos`` scalar, ``bt [nbs]``, ``key_pos [C]``) — the batch
       shares one position stream (the pipeline tick's micro-batch; B == 1).
 
-    The new k/v are **scattered into the pool first, then gathered back** in
-    ring order, so the attended key set is element-for-element identical to
-    the contiguous ring buffer (extra never-written tail slots contribute
-    exact zeros through the masked softmax) — greedy decode parity between
+    The new k/v are **scattered into the pool first**, then attended through
+    the slot's block table, so the attended key set is element-for-element
+    identical to the contiguous ring buffer (extra never-written tail slots
+    stay masked via ``key_pos == -1``) — greedy decode parity between
     layouts is exact, not approximate.  ``write_mask`` (bool, [B] or scalar)
     redirects masked rows' writes to the scratch block and freezes their
     ``key_pos``/``pos``, so idle slots and dead pipeline ticks can never
     touch another slot's blocks.
 
-    ``impl`` is accepted for signature parity; the paged path always uses
-    the (gather + masked-sdpa) XLA math — the Pallas decode kernel reads a
-    contiguous cache and is dispatched only by :func:`attend_decode`.
+    ``impl`` selects how the pool is *read* (unknown values raise):
+
+    - ``"pallas"`` — :func:`repro.kernels.ops.paged_decode_attention`: the
+      block table is scalar-prefetched into the kernel and drives the kv
+      BlockSpec index map, so the slot's blocks stream HBM->VMEM once with
+      online-softmax state in scratch.  No ``[B, C_pad, n_kv, hd]`` gather
+      temporary is ever materialized — the decode cache-read term halves.
+    - ``"xla"`` / ``"chunked"`` — the reference path: gather the slot's
+      blocks back in ring order, then run the masked sdpa over the dense
+      copy.  ``kv_dtype="int8"`` always takes this path (per-block in-kernel
+      dequant is future work) — the pool is dequantized during the gather.
     """
+    _check_decode_impl(impl)
     b = x.shape[0]
     shared = cache["pos"].ndim == 0
     if shared:
@@ -390,21 +415,29 @@ def attend_decode_paged(params: Dict, cfg: ModelConfig, spec: BlockSpec,
         new_key_pos = jnp.where(wmask[:, None], new_key_pos, key_pos)
         new_pos = jnp.where(wmask, new_pos, pos)
 
-    # gather the slot's blocks back in ring order ([B, C_pad, n_kv, hd]);
-    # unmapped entries read block 0 garbage, masked via key_pos == -1
-    read = jnp.clip(bt[:, :nbs], 0, None)
-    if quant:
-        ck = _dequantize_kv(kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
-                            ksp[read].reshape(b, c_pad, cfg.n_kv_heads),
-                            k.dtype)
-        cv = _dequantize_kv(vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
-                            vsp[read].reshape(b, c_pad, cfg.n_kv_heads),
-                            v.dtype)
+    if impl == "pallas" and not quant:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q, kp, vp, bt[:, :nbs], new_key_pos, pos,
+            window=spec.window, softcap=cfg.attn_logit_softcap)
+        out = out.reshape(b, 1, cfg.q_dim)
     else:
-        ck = kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
-        cv = vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
-    out = _sdpa(cfg, spec, q, ck, cv, positions, new_key_pos,
-                k_valid=new_key_pos >= 0)
+        # reference / int8 fallback: gather the slot's blocks back in ring
+        # order ([B, C_pad, n_kv, hd]); unmapped entries read block 0
+        # garbage, masked via key_pos == -1
+        read = jnp.clip(bt[:, :nbs], 0, None)
+        if quant:
+            ck = _dequantize_kv(
+                kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                ksp[read].reshape(b, c_pad, cfg.n_kv_heads), k.dtype)
+            cv = _dequantize_kv(
+                vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                vsp[read].reshape(b, c_pad, cfg.n_kv_heads), v.dtype)
+        else:
+            ck = kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+            cv = vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+        out = _sdpa(cfg, spec, q, ck, cv, positions, new_key_pos,
+                    k_valid=new_key_pos >= 0)
     y = out @ params["wo"]
     y = logical_constraint(y, "batch", None, "embed")
     new_cache = {"k_pool": kp, "v_pool": vp, "bt": cache["bt"],

@@ -365,7 +365,9 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
     position — the masked length-bucketed prefill leaves rows at different
     lengths.  Paged caches (:func:`init_paged_caches`) additionally route
     KV through per-slot block tables; ``write_mask [B]`` freezes masked
-    slots' pool writes.
+    slots' pool writes.  ``impl="pallas"`` dispatches the Pallas decode
+    kernels on both layouts (the paged kernel reads pool blocks through
+    the table — no per-step gather); unknown impls raise.
     """
     if inputs.ndim == 1 and jnp.issubdtype(inputs.dtype, jnp.integer):
         inputs2 = inputs[:, None]

@@ -60,6 +60,12 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
     blocks of ``block_size`` tokens; default = no overcommit) instead of
     worst-case per-slot caches — all three kinds honour it (``sim`` keeps
     accounting only).
+
+    ``impl`` selects the attention math on both real kinds: ``"pallas"``
+    dispatches the Pallas kernels end to end, including the paged decode
+    kernel that reads pool blocks through the slot's block table (no
+    per-step gather); ``"xla"``/``"chunked"`` run the jnp reference.
+    Unknown values raise at the first decode step.
     """
     assert deployment.ok, f"deployment {deployment.method} is OOM-infeasible"
     plan = deployment.plan

@@ -29,6 +29,11 @@ the logical block id space across all stages.  Blocks are allocated
 crosses a block boundary; when the pool cannot cover the next tick the
 backend raises :class:`~repro.runtime.base.PoolExhausted` before mutating
 anything, and the scheduler preempts.  Paged slots require ``lanes == 1``.
+
+``impl="pallas"`` runs the Pallas attention kernels inside the tick's layer
+scan; on the paged layout each stage's pool is read through the micro-
+batch's block-table row *inside* the paged decode kernel (shared-position
+semantics, one lane) instead of being gathered per tick.
 """
 from __future__ import annotations
 

@@ -16,8 +16,12 @@ Two cache layouts, selectable via ``cache_layout``:
   ``num_blocks`` KV blocks (``block_size`` tokens each, one pool stripe per
   attention layer; see ``models/kvcache.py``).  Decode runs the whole slot
   batch in ONE pass with per-slot positions (no vmap — a shared pool cannot
-  be batched), gathering each slot's blocks through its table and
-  scattering the new token's k/v back.  Host-side allocation
+  be batched), scattering the new token's k/v into the pool and attending
+  through each slot's table: ``impl="pallas"`` streams the blocks directly
+  inside the paged decode kernel (block table scalar-prefetched into the
+  BlockSpec index map — no gathered copy of the cache per step), while
+  ``impl="xla"`` gathers the blocks into a dense ``[B, C_pad, ...]``
+  temporary and runs the masked sdpa.  Host-side allocation
   (:class:`~repro.runtime.base.SlotPager`) grows tables as slots cross
   block boundaries and raises :class:`~repro.runtime.base.PoolExhausted`
   *before* mutating anything when the pool can't cover the next quantum —

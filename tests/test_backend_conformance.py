@@ -51,12 +51,13 @@ def _tiny_cfg_params():
     return cfg, params
 
 
-def make_backend(kind: str, layout: str, n_slots: int = 3):
+def make_backend(kind: str, layout: str, n_slots: int = 3, impl: str = "xla"):
     if kind == "tensor":
         from repro.runtime import TensorBackend
         cfg, params = _tiny_cfg_params()
         return cfg, TensorBackend(cfg, params, n_slots=n_slots,
-                                  max_len=MAX_LEN, cache_layout=layout)
+                                  max_len=MAX_LEN, cache_layout=layout,
+                                  impl=impl)
     if kind == "sim":
         from repro.core.simulator import StageCosts
         from repro.runtime import SimBackend
@@ -211,6 +212,27 @@ def test_tensor_paged_contiguous_parity():
         "degenerate reference"
 
 
+def test_tensor_impl_parity_paged_pallas():
+    """Acceptance: greedy decode is token-identical across contiguous-pallas,
+    paged-xla, and paged-pallas — the fused block-table kernel (interpreted
+    on CPU) must be a pure dataflow change, not a semantic one."""
+    cfg, _ = _tiny_cfg_params()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 8, 5, 6, 4)]
+    outs = {}
+    for name, (layout, impl) in {
+            "contiguous-pallas": ("contiguous", "pallas"),
+            "paged-xla": ("paged", "xla"),
+            "paged-pallas": ("paged", "pallas")}.items():
+        _, backend = make_backend("tensor", layout, impl=impl)
+        outs[name] = serve_prompts(backend, prompts)
+    assert outs["contiguous-pallas"] == outs["paged-xla"] \
+        == outs["paged-pallas"], outs
+    assert len(np.unique([t for ts in outs["paged-pallas"].values()
+                          for t in ts])) > 2, "degenerate reference"
+
+
 def test_pipeline_paged_contiguous_parity():
     """Acceptance: paged and contiguous layouts match token-for-token on the
     no-bubbles PipelineBackend too (subprocess: needs multiple devices)."""
@@ -241,8 +263,11 @@ contig = serve(PipelineBackend(cfg, params, spec, mesh, n_slots=3,
                                max_len=32))
 paged = serve(PipelineBackend(cfg, params, spec, mesh, n_slots=3, max_len=32,
                               cache_layout="paged"))
+pallas = serve(PipelineBackend(cfg, params, spec, mesh, n_slots=3, max_len=32,
+                               cache_layout="paged", impl="pallas"))
 assert contig == paged, (contig, paged)
 assert tens == paged, (tens, paged)     # and across backends
+assert paged == pallas, (paged, pallas) # fused block-table kernel in the tick
 print("pipeline parity OK")
 """)
 

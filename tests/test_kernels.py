@@ -4,8 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:        # only the property-based sweep needs hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels.int8_matmul import quantize_int8
@@ -121,6 +124,204 @@ def test_decode_attention_ring_buffer_window():
 
 
 # --------------------------------------------------------------------------- #
+# paged decode attention (block-table indirection fused into the kernel)
+# --------------------------------------------------------------------------- #
+
+def _paged_case(b, kh, d, bs, nbs, num_blocks, lens, seed):
+    """Pools + a block table with the last entry of row 0 unmapped (-1)."""
+    c = nbs * bs
+    ks = jax.random.split(K(seed), 3)
+    k_pool = jax.random.normal(ks[0], (num_blocks + 1, bs, kh, d))
+    v_pool = jax.random.normal(ks[1], (num_blocks + 1, bs, kh, d))
+    rng = np.random.default_rng(seed)
+    bt = rng.permutation(num_blocks)[:b * nbs].reshape(b, nbs).astype(np.int32)
+    bt[0, -1] = -1                      # unmapped tail: must read as masked
+    lens = np.asarray(lens)
+    key_pos = np.where(np.arange(c)[None] < lens[:, None],
+                       np.arange(c)[None], -1).astype(np.int32)
+    key_pos[0, (nbs - 1) * bs:] = -1    # nothing valid in the unmapped block
+    pos = (lens - 1).astype(np.int32)
+    return (k_pool, v_pool, jnp.asarray(bt), jnp.asarray(key_pos),
+            jnp.asarray(pos), ks[2])
+
+
+def _paged_gather_ref(q, k_pool, v_pool, bt, mask, *, softcap=None):
+    """Oracle: dense gather through the table, then masked sdpa per row."""
+    b, nbs = bt.shape
+    bs, kh, d = k_pool.shape[1:]
+    read = jnp.clip(bt, 0, None)
+    ck = k_pool[read].reshape(b, nbs * bs, kh, d)
+    cv = v_pool[read].reshape(b, nbs * bs, kh, d)
+    return jnp.concatenate(
+        [ref.decode_attention_ref(q[i:i + 1], ck[i:i + 1], cv[i:i + 1],
+                                  mask[i:i + 1], softcap=softcap)
+         for i in range(b)], axis=0)
+
+
+@pytest.mark.parametrize("softcap", [None, 30.0])
+@pytest.mark.parametrize("b,h,kh,d,bs,nbs,lens", [
+    (2, 4, 2, 64, 16, 4, (40, 25)),      # GQA, per-slot positions
+    (3, 8, 1, 32, 16, 3, (48, 1, 17)),   # MQA, a fresh slot and a full one
+    (1, 2, 2, 128, 32, 2, (33, )),       # MHA, bigger blocks
+])
+def test_paged_decode_matches_gather_ref(b, h, kh, d, bs, nbs, lens, softcap):
+    """Kernel reads through the block table == dense gather + masked sdpa,
+    with every row at its own position (per-slot semantics)."""
+    k_pool, v_pool, bt, key_pos, pos, kq = _paged_case(
+        b, kh, d, bs, nbs, num_blocks=b * nbs + 2, lens=lens, seed=20)
+    q = jax.random.normal(kq, (b, h, d))
+    out = ops.paged_decode_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     softcap=softcap, interpret=True)
+    mask = (key_pos >= 0) & (key_pos <= pos[:, None])
+    want = _paged_gather_ref(q, k_pool, v_pool, bt, mask, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_decode_ring_wraparound_window():
+    """Positions past C_pad wrap the ring: slots hold non-monotonic
+    key_pos, and the window mask must follow positions, not slot order."""
+    b, h, kh, d, bs, nbs = 1, 2, 1, 32, 16, 4
+    c = nbs * bs                                  # 64
+    ks = jax.random.split(K(21), 3)
+    k_pool = jax.random.normal(ks[0], (nbs + 1, bs, kh, d))
+    v_pool = jax.random.normal(ks[1], (nbs + 1, bs, kh, d))
+    q = jax.random.normal(ks[2], (b, h, d))
+    bt = jnp.arange(nbs, dtype=jnp.int32)[None]
+    pos = jnp.asarray([150], jnp.int32)           # wrapped: slot = pos % 64
+    wrap = 150 % c
+    key_pos = (jnp.arange(c) + (150 // c) * c
+               - jnp.where(jnp.arange(c) > wrap, c, 0)).astype(jnp.int32)[None]
+    window = 40
+    out = ops.paged_decode_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     window=window, interpret=True)
+    mask = (key_pos >= 0) & (key_pos <= pos[:, None]) \
+        & (key_pos > pos[:, None] - window)
+    assert 0 < int(mask.sum()) < c, "window must mask a strict subset"
+    want = _paged_gather_ref(q, k_pool, v_pool, bt, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_decode_fully_masked_row_is_finite():
+    """An idle slot (every key_pos == -1, table unmapped) must produce
+    finite output (exact zeros), not NaN from an empty softmax."""
+    b, h, kh, d, bs, nbs = 2, 4, 2, 32, 16, 2
+    k_pool, v_pool, bt, key_pos, pos, kq = _paged_case(
+        b, kh, d, bs, nbs, num_blocks=b * nbs, lens=(20, 5), seed=22)
+    q = jax.random.normal(kq, (b, h, d))
+    key_pos = key_pos.at[1].set(-1)               # row 1: never written
+    bt = bt.at[1].set(-1)
+    out = ops.paged_decode_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out[1]),
+                                  np.zeros_like(np.asarray(out[1])))
+    # the live row is unaffected by its dead neighbour
+    solo = ops.paged_decode_attention(q[:1], k_pool, v_pool, bt[:1],
+                                      key_pos[:1], pos[:1], interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(solo[0]),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---- model-level: attend_decode_paged dispatch (per-slot vs shared,
+# ---- write_mask scratch isolation, impl contract)
+
+def _attn_fixture():
+    from repro.configs import get_config
+    from repro.models import attention as A
+    from repro.models.kvcache import init_paged_block_cache
+    from repro.models.layers import ParamBuilder
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    spec = [s for s in cfg.layer_specs() if s.kind == "attn"][0]
+    pb = ParamBuilder(K(23), jnp.float32)
+    A.init_attention(pb, "mixer", cfg)
+
+    def make_cache(batch, num_blocks=8, max_len=32):
+        cache = init_paged_block_cache(cfg, spec, batch, max_len, num_blocks,
+                                       16, jnp.float32)
+        cache["k_pool"] = jax.random.normal(K(24), cache["k_pool"].shape)
+        cache["v_pool"] = jax.random.normal(K(25), cache["v_pool"].shape)
+        return cache
+
+    return cfg, spec, pb.params["mixer"], make_cache
+
+
+def test_attend_decode_paged_per_slot_matches_shared():
+    """Shared semantics (scalar pos, the pipeline tick's view) must equal
+    the same slot decoded through the per-slot convention."""
+    from repro.models import attention as A
+    cfg, spec, params, make_cache = _attn_fixture()
+    x = jax.random.normal(K(26), (1, 1, cfg.d_model))
+    per = make_cache(1)
+    per["bt"] = jnp.array([[0, 1]], jnp.int32)
+    per["key_pos"] = per["key_pos"].at[0, :20].set(jnp.arange(20))
+    per["pos"] = jnp.array([20], jnp.int32)
+    shared = dict(per, bt=per["bt"][0], key_pos=per["key_pos"][0],
+                  pos=per["pos"][0])
+    for impl in ("xla", "pallas"):
+        y_per, c_per = A.attend_decode_paged(params, cfg, spec, x,
+                                             dict(per), impl)
+        y_sh, c_sh = A.attend_decode_paged(params, cfg, spec, x,
+                                           dict(shared), impl)
+        np.testing.assert_array_equal(np.asarray(y_per), np.asarray(y_sh))
+        np.testing.assert_array_equal(np.asarray(c_per["key_pos"][0]),
+                                      np.asarray(c_sh["key_pos"]))
+        assert c_sh["pos"].ndim == 0 and int(c_sh["pos"]) == 21
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_attend_decode_paged_write_mask_scratch_isolation(impl):
+    """A write-masked row must scatter to the scratch block only: no live
+    slot's pool blocks change, the masked row's key_pos/pos freeze, and the
+    live rows' outputs equal an unmasked decode of the same rows."""
+    from repro.models import attention as A
+    cfg, spec, params, make_cache = _attn_fixture()
+    b = 2
+    x = jax.random.normal(K(27), (b, 1, cfg.d_model))
+    cache = make_cache(b)
+    cache["bt"] = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    cache["key_pos"] = cache["key_pos"].at[0, :20].set(jnp.arange(20))
+    cache["key_pos"] = cache["key_pos"].at[1, :7].set(jnp.arange(7))
+    cache["pos"] = jnp.array([20, 7], jnp.int32)
+    wm = jnp.array([True, False])
+    y, new = A.attend_decode_paged(params, cfg, spec, x, dict(cache), impl,
+                                   write_mask=wm)
+    scratch = cache["k_pool"].shape[0] - 1
+    live = np.arange(scratch)                   # every non-scratch block
+    row0_blocks = {0, 1}
+    for k in ("k_pool", "v_pool"):
+        for blk in live:
+            if blk in row0_blocks:
+                continue                        # row 0 wrote its own block
+            np.testing.assert_array_equal(np.asarray(new[k][blk]),
+                                          np.asarray(cache[k][blk]),
+                                          err_msg=f"{k}[{blk}] corrupted")
+    np.testing.assert_array_equal(np.asarray(new["key_pos"][1]),
+                                  np.asarray(cache["key_pos"][1]))
+    assert int(new["pos"][1]) == 7 and int(new["pos"][0]) == 21
+    # row 0's output is independent of row 1 being masked
+    y_solo, _ = A.attend_decode_paged(
+        params, cfg, spec, x[:1],
+        {**{k: v for k, v in cache.items() if "pool" in k},
+         "bt": cache["bt"][:1], "key_pos": cache["key_pos"][:1],
+         "pos": cache["pos"][:1]}, impl)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(y_solo[0]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_attend_decode_paged_unknown_impl_raises():
+    from repro.models import attention as A
+    cfg, spec, params, make_cache = _attn_fixture()
+    x = jax.random.normal(K(28), (1, 1, cfg.d_model))
+    cache = make_cache(1)
+    with pytest.raises(ValueError, match="unknown decode impl"):
+        A.attend_decode_paged(params, cfg, spec, x, cache, "cuda")
+    with pytest.raises(ValueError, match="unknown decode impl"):
+        A.attend_decode(params, cfg, spec, x, cache, "cuda")
+
+
+# --------------------------------------------------------------------------- #
 # RG-LRU scan
 # --------------------------------------------------------------------------- #
 
@@ -146,18 +347,23 @@ def test_rglru_scan_zero_init_equals_none():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b2), rtol=0, atol=0)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 40),
-       st.integers(1, 260))
-def test_rglru_scan_property(seed, b, s, r):
-    ks = jax.random.split(K(seed), 3)
-    log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, r)))
-    bb = jax.random.normal(ks[1], (b, s, r))
-    h0 = jax.random.normal(ks[2], (b, r))
-    out = ops.rglru_scan(log_a, bb, h0, interpret=True)
-    want = ref.rglru_scan_ref(log_a, bb, h0)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                               rtol=2e-5, atol=2e-5)
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 40),
+           st.integers(1, 260))
+    def test_rglru_scan_property(seed, b, s, r):
+        ks = jax.random.split(K(seed), 3)
+        log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, r)))
+        bb = jax.random.normal(ks[1], (b, s, r))
+        h0 = jax.random.normal(ks[2], (b, r))
+        out = ops.rglru_scan(log_a, bb, h0, interpret=True)
+        want = ref.rglru_scan_ref(log_a, bb, h0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+else:       # keep the gap visible in test reports instead of not collecting
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_rglru_scan_property():
+        pass
 
 
 # --------------------------------------------------------------------------- #
