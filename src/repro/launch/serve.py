@@ -59,6 +59,22 @@ def main():
                          "provisioning (no overcommit).  Smaller pools "
                          "overcommit: admission goes block-budgeted and "
                          "exhaustion preempts the youngest request")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed shared-prefix KV reuse over the "
+                         "paged pool (copy-on-write block adoption at "
+                         "admission; requires --cache-layout paged and an "
+                         "all-attention model, else silently ignored)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: stream prompts through prefill "
+                         "this many tokens per scheduler quantum, "
+                         "interleaved with decode (0 = monolithic)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same random prefix of this "
+                         "many tokens (demo/validation workload for "
+                         "--prefix-cache)")
+    ap.add_argument("--expect-prefix-hits", action="store_true",
+                    help="exit nonzero unless the run recorded at least one "
+                         "prefix-cache hit (CI smoke guard)")
     ap.add_argument("--devices", type=int, default=0,
                     help="fake XLA host devices (pipeline mode defaults "
                          "to --stages)")
@@ -101,10 +117,20 @@ def main():
             max(args.prompt_len // 2, 1), args.prompt_len + 1, args.batch)]
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
+    if args.shared_prefix:
+        if args.shared_prefix >= min(lens):
+            ap.error(f"--shared-prefix {args.shared_prefix} must be shorter "
+                     f"than every prompt (min {min(lens)})")
+        pre = rng.integers(0, cfg.vocab_size,
+                           args.shared_prefix).astype(np.int32)
+        prompts = [np.concatenate([pre, p[args.shared_prefix:]])
+                   for p in prompts]
 
     kv_kw = dict(cache_layout=args.cache_layout,
                  block_size=args.block_size,
-                 num_blocks=args.kv_blocks or None)
+                 num_blocks=args.kv_blocks or None,
+                 prefix_cache=args.prefix_cache)
+    chunk = args.prefill_chunk or None
     if args.mode == "tp":
         mesh = None
         if args.devices:
@@ -112,7 +138,7 @@ def main():
         llm = LLM.from_backend(runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
             max_len=args.max_len, mesh=mesh, impl=args.impl, **kv_kw),
-            seed=args.seed, min_bucket=args.min_bucket)
+            seed=args.seed, min_bucket=args.min_bucket, prefill_chunk=chunk)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -126,7 +152,8 @@ def main():
                      dtype_bytes=2),
             objective="throughput", kind="pipeline", params=params,
             n_slots=args.slots or None, max_len=args.max_len, seed=args.seed,
-            min_bucket=args.min_bucket, impl=args.impl, **kv_kw)
+            min_bucket=args.min_bucket, impl=args.impl, prefill_chunk=chunk,
+            **kv_kw)
         n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "
@@ -152,10 +179,20 @@ def main():
     print(f"served {len(outs)} requests ({[o.n_prompt for o in outs]} prompt "
           f"tokens), {total} generated in {dt:.2f}s ({total / dt:.1f} tok/s) "
           f"— {llm.stats}")
+    st = llm.stats
+    if st.prefix_hits or st.prefill_chunks:
+        print(f"  prefix cache: {st.prefix_hits} hits "
+              f"({st.prefix_hit_tokens} prompt tokens reused); "
+              f"{st.prefill_chunks} prefill chunk passes")
     for o in outs[:4]:
         ttft = f"{o.timing.ttft_s:.2f}s" if o.timing.ttft_s else "-"
         print(f"  req {o.uid}: {o.finish_reason} after {o.n_generated} toks "
               f"(ttft {ttft}) {o.tokens[:10]}")
+    if args.expect_prefix_hits and not st.prefix_hits:
+        raise SystemExit(
+            "--expect-prefix-hits: no prefix-cache hits were recorded "
+            f"(prefix_caching={llm.backend.info.prefix_caching}); check "
+            "--cache-layout paged / --prefix-cache / --shared-prefix")
 
 
 if __name__ == "__main__":

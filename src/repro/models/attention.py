@@ -280,6 +280,92 @@ def prefill_cache(params: Dict, cfg: ModelConfig, spec: BlockSpec,
     return y, new_cache
 
 
+def extend_cache(params: Dict, cfg: ModelConfig, spec: BlockSpec,
+                 x: jax.Array, positions: jax.Array, seq_valid: jax.Array,
+                 cache: Dict, impl: str = "xla") -> Tuple[jax.Array, Dict]:
+    """Prefill a *continuation*: run ``x``'s tokens at absolute positions
+    ``positions`` against a **paged** cache that already holds keys for
+    positions below them (an adopted shared prefix and/or earlier chunks),
+    writing the new k/v into the slot's blocks.
+
+    x [B, S, d]; positions [B, S] absolute, right-aligned payload (pads on
+    the left, ``seq_valid`` False there).  Only valid for specs where
+    ``attn_cache_len == max_len`` (no effective sliding window — see
+    ``kvcache.prefix_sharing_supported``): positions never wrap the ring,
+    so ``ring slot == position`` and a shared block is never rewritten
+    (the copy-on-write rule).  Pad rows' writes are redirected to the
+    scratch block and their ``key_pos`` entries are left untouched, so a
+    padded chunk is bit-for-bit the unpadded continuation.
+
+    The chunk's k/v are scattered into the pool first, then attended
+    through the block table with the chunk's own causal mask, so token i
+    of the chunk sees: the adopted prefix, all earlier chunks, and chunk
+    tokens 0..i.  ``impl="pallas"`` reads via the same gather as the XLA
+    reference (extend is not the decode hot loop; the paged kernel is
+    decode-shaped).
+    """
+    b, s = x.shape[:2]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    bt, key_pos = cache["bt"], cache["key_pos"]
+    c_pad = key_pos.shape[-1]
+    bsz = cache["k_pool"].shape[1]
+    nbs = c_pad // bsz
+    scratch = cache["k_pool"].shape[0] - 1
+
+    # scatter the chunk into the slot's blocks (scratch for pads/unmapped)
+    blk = jnp.clip(positions // bsz, 0, nbs - 1)                  # [B, S]
+    off = positions % bsz
+    phys = jnp.take_along_axis(bt, blk, axis=1)                   # [B, S]
+    tgt = jnp.where(seq_valid & (phys >= 0), phys, scratch)
+    quant = cfg.kv_dtype == "int8"
+    if quant:
+        k8, ks = _quantize_kv(k)
+        v8, vs = _quantize_kv(v)
+        kp = cache["k_pool"].at[tgt, off].set(k8)
+        vp = cache["v_pool"].at[tgt, off].set(v8)
+        ksp = cache["k_scale_pool"].at[tgt, off].set(ks)
+        vsp = cache["v_scale_pool"].at[tgt, off].set(vs)
+    else:
+        kp = cache["k_pool"].at[tgt, off].set(
+            k.astype(cache["k_pool"].dtype))
+        vp = cache["v_pool"].at[tgt, off].set(
+            v.astype(cache["v_pool"].dtype))
+
+    # ring slot == position (no wrap), so key_pos updates need no scatter:
+    # mark exactly this chunk's position range valid, leave the rest alone
+    end = positions[:, -1]                                        # [B]
+    n_valid = jnp.sum(seq_valid, axis=-1)
+    lo = end + 1 - n_valid                                        # chunk start
+    iota = jnp.arange(c_pad, dtype=jnp.int32)[None, :]
+    in_chunk = (iota >= lo[:, None]) & (iota <= end[:, None])
+    new_key_pos = jnp.where(in_chunk, iota, key_pos)
+    new_pos = (end + 1).astype(jnp.int32)
+
+    # attend through the table over the dense gather (prefix + chunk)
+    read = jnp.clip(bt[:, :nbs], 0, None)
+    if quant:
+        ck = _dequantize_kv(kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                            ksp[read].reshape(b, c_pad, cfg.n_kv_heads),
+                            k.dtype)
+        cv = _dequantize_kv(vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                            vsp[read].reshape(b, c_pad, cfg.n_kv_heads),
+                            v.dtype)
+    else:
+        ck = kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+        cv = vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+    sdpa = _sdpa_chunked if impl == "chunked" else _sdpa
+    out = sdpa(cfg, spec, q, ck, cv, positions, new_key_pos,
+               k_valid=new_key_pos >= 0)
+    y = out @ params["wo"]
+    y = logical_constraint(y, "batch", None, "embed")
+    new_cache = {"k_pool": kp, "v_pool": vp, "bt": bt,
+                 "key_pos": new_key_pos, "pos": new_pos}
+    if quant:
+        new_cache["k_scale_pool"] = ksp
+        new_cache["v_scale_pool"] = vsp
+    return y, new_cache
+
+
 def attend_decode(params: Dict, cfg: ModelConfig, spec: BlockSpec,
                   x: jax.Array, cache: Dict, impl: str = "xla",
                   ) -> Tuple[jax.Array, Dict]:

@@ -58,6 +58,22 @@ def max_ctx_blocks(cfg: ModelConfig, max_len: int,
     return max(-(-attn_cache_len(s, max_len) // block_size) for s in specs)
 
 
+def prefix_sharing_supported(cfg: ModelConfig, max_len: int) -> bool:
+    """True when every layer's cache is position-addressed with no eviction
+    — the precondition for shared-prefix KV reuse and chunked prefill.
+
+    Requires all-attention layers (recurrent kinds carry state that cannot
+    be restored from pool blocks) with no *effective* sliding window at
+    this serving length (a windowed ring wraps, so a shared block would be
+    overwritten in place — a copy-on-write violation).  Backends silently
+    disable prefix caching / extend when this returns False.
+    """
+    specs = list(cfg.layer_specs())
+    return bool(specs) and all(
+        s.kind == "attn" and attn_cache_len(s, max_len) == max_len
+        for s in specs)
+
+
 def block_pool_bytes_per_block(cfg: ModelConfig, dtype=jnp.bfloat16) -> int:
     """Bytes one logical block occupies summed over every attention layer
     (each layer materializes the block id space in its own pool)."""

@@ -197,6 +197,10 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
     mixers treat them as state-preserving no-ops, and the block re-zeroes
     pad activations on exit so they cannot leak into later layers (e.g.
     through a causal conv window)."""
+    if mode == "extend" and spec.kind != "attn":
+        raise ValueError(
+            f"extend (chunked/offset prefill) requires attention caches; "
+            f"got {spec.kind!r} — gate via kvcache.prefix_sharing_supported")
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x, cfg.norm)
     new_cache = cache
@@ -206,6 +210,10 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
         elif mode == "prefill":
             mix, new_cache = attn.prefill_cache(params["mixer"], cfg, spec, h,
                                                 positions, cache, impl)
+        elif mode == "extend":
+            mix, new_cache = attn.extend_cache(params["mixer"], cfg, spec, h,
+                                               positions, seq_valid, cache,
+                                               impl)
         elif is_paged_attn_cache(cache):
             mix, new_cache = attn.attend_decode_paged(
                 params["mixer"], cfg, spec, h, cache, impl,
@@ -406,6 +414,61 @@ def decode_step(cfg: ModelConfig, params: PyTree, inputs: jax.Array,
     x = apply_norm(params["final_norm"], x, cfg.norm)
     logits = lm_logits(params, cfg, x)
     return logits[:, 0], new_caches
+
+
+def extend_step(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+                caches: PyTree, starts: jax.Array, lens: jax.Array,
+                impl: str = "xla") -> Tuple[jax.Array, PyTree]:
+    """Chunked/offset prefill over paged caches: run ``tokens`` [B, S]
+    (right-aligned payload, left-padded to S, true lengths ``lens`` [B]) at
+    absolute positions ``starts[b] .. starts[b]+lens[b]-1`` with every
+    earlier cache key visible — the continuation twin of
+    ``forward(mode="prefill")`` for prompts whose head is already cached
+    (an adopted shared prefix and/or previous chunks).
+
+    Returns (logits [B, S, vocab], updated caches).  Row ``b``'s last-token
+    logits sit at ``logits[b, -1]``.  Only valid for paged all-attention
+    deployments with no effective sliding window
+    (``kvcache.prefix_sharing_supported``); recurrent kinds raise.
+    """
+    b, s = tokens.shape[:2]
+    starts = jnp.asarray(starts, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    cols = jnp.arange(s, dtype=jnp.int32)[None, :]
+    positions = starts[:, None] + cols - (s - lens)[:, None]      # [B, S]
+    seq_valid = cols >= (s - lens)[:, None]
+    x = _embed_inputs(cfg, params, tokens, positions)
+    x = jnp.where(seq_valid[..., None], x, 0)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.n_full_periods > 0:
+        def body(x_c, per_period):
+            p_params, p_caches = per_period
+            new_p = {}
+            for p, spec in enumerate(cfg.pattern):
+                x_c, nc, _ = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
+                                          positions, "extend",
+                                          p_caches[f"p{p}"], impl,
+                                          seq_valid=seq_valid)
+                new_p[f"p{p}"] = nc
+            return x_c, new_p
+
+        x, new_caches["stack"] = jax.lax.scan(
+            body, x, (params["stack"], caches["stack"]))
+
+    if cfg.tail:
+        new_tail = {}
+        for t, spec in enumerate(cfg.tail):
+            x, nc, _ = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
+                                    positions, "extend",
+                                    caches["tail"][f"t{t}"], impl,
+                                    seq_valid=seq_valid)
+            new_tail[f"t{t}"] = nc
+        new_caches["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params, cfg, x)
+    return logits, new_caches
 
 
 def _first_pos(caches: PyTree) -> jax.Array:

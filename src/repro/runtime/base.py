@@ -23,8 +23,9 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -50,8 +51,16 @@ class BlockAllocator:
     Block ids are indices into the backend's device pools; every attention
     layer materializes the same id space in its own pool storage, so one
     logical block backs one (block_size-token) stripe of every layer's cache.
-    Refcounts exist so future prefix sharing can map one block into several
-    slots; today each block has refcount 1.
+    Refcounts let prefix sharing map one block into several slots' tables.
+
+    **Cached-free LRU** (prefix caching): a block marked via
+    :meth:`register` whose refcount drops to 0 is not returned to the free
+    list — it parks in an LRU of *cached-free* blocks whose device bytes
+    stay intact, still counting toward :attr:`free_blocks` (the pool never
+    shrinks).  :meth:`incref` resurrects a cached-free block for zero-copy
+    reuse; :meth:`alloc` repurposes cached-free blocks (oldest first) only
+    after the plain free list runs dry, notifying ``on_evict`` so the
+    prefix index can drop its mapping.
     """
 
     def __init__(self, num_blocks: int):
@@ -59,30 +68,62 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self.refcount = np.zeros(num_blocks, np.int32)
+        self._registered: set = set()          # live blocks worth caching
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
+        self.on_evict: Optional[Callable[[int], None]] = None
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free plus cached-free (evictable)."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Cached-free blocks (refcount 0, device bytes still meaningful)."""
+        return len(self._cached)
 
     def alloc(self, n: int) -> List[int]:
         """Allocate ``n`` blocks atomically; raises :class:`PoolExhausted`
-        (allocating nothing) when fewer than ``n`` are free."""
-        if n > len(self._free):
-            raise PoolExhausted(needed=n, free=len(self._free))
-        out = [self._free.pop() for _ in range(n)]
+        (allocating nothing) when fewer than ``n`` are free.  Prefers the
+        plain free list; falls back to evicting the oldest cached-free
+        blocks (calling ``on_evict`` for each)."""
+        if n > self.free_blocks:
+            raise PoolExhausted(needed=n, free=self.free_blocks)
+        out = []
+        for _ in range(n):
+            if self._free:
+                out.append(self._free.pop())
+            else:
+                b, _ = self._cached.popitem(last=False)     # LRU eviction
+                self._registered.discard(b)
+                if self.on_evict is not None:
+                    self.on_evict(b)
+                out.append(b)
         self.refcount[out] += 1
         return out
 
     def incref(self, block: int) -> None:
-        assert self.refcount[block] > 0, f"incref of free block {block}"
+        if self.refcount[block] == 0:
+            # resurrect a cached-free block: its bytes are being adopted
+            assert block in self._cached, f"incref of free block {block}"
+            del self._cached[block]
         self.refcount[block] += 1
+
+    def register(self, block: int) -> None:
+        """Mark a live block as prefix-indexed: when its refcount drops to
+        0 it parks in the cached-free LRU instead of the free list."""
+        assert self.refcount[block] > 0, f"register of free block {block}"
+        self._registered.add(int(block))
 
     def free(self, blocks: Sequence[int]) -> None:
         for b in blocks:
             assert self.refcount[b] > 0, f"double free of block {b}"
             self.refcount[b] -= 1
             if self.refcount[b] == 0:
-                self._free.append(int(b))
+                if b in self._registered:
+                    self._cached[int(b)] = None     # newest end of the LRU
+                else:
+                    self._free.append(int(b))
 
 
 class SlotPager:
@@ -143,6 +184,22 @@ class SlotPager:
         self.table[slot, lo:lo + need] = new
         self.n_alloc[slot] = lo + need
         return True
+
+    def adopt(self, slot: int, blocks: Sequence[int]) -> None:
+        """Map already-populated blocks (a cached prefix) into an empty
+        slot's table head, increfing each — copy-on-write sharing: the slot
+        reads these blocks through its table but only ever writes positions
+        past them.  Blocks may be live (shared with another slot) or
+        cached-free (resurrected); either way no data moves."""
+        assert int(self.n_alloc[slot]) == 0, \
+            f"adopt into non-empty slot {slot}"
+        assert len(blocks) <= self.table.shape[1], (len(blocks), self.table.shape)
+        for b in blocks:
+            self.allocator.incref(int(b))
+        n = len(blocks)
+        if n:
+            self.table[slot, :n] = np.asarray(blocks, np.int32)
+        self.n_alloc[slot] = n
 
     def release(self, slot: int) -> bool:
         """Free every block ``slot`` holds.  Returns True if any were held."""
@@ -216,6 +273,11 @@ class BackendInfo:
     free_blocks: int = 0               # live unallocated blocks (paged only)
     bytes_per_block: int = 0           # summed over every attention layer
     max_ctx_blocks: int = 0            # most blocks one slot can ever hold
+    prefix_caching: bool = False       # shared-prefix KV reuse is active
+    supports_extend: bool = False      # start_stream/prefill_chunk available
+    prefix_hits: int = 0               # admissions that adopted cached blocks
+    prefix_hit_tokens: int = 0         # prompt tokens served from the cache
+    prefix_blocks_cached: int = 0      # cached-free blocks held for reuse
 
     @property
     def paged(self) -> bool:
@@ -253,7 +315,11 @@ class InferenceBackend(abc.ABC):
         pager = getattr(self, "pager", None)
         if pager is None:
             return info
-        return dataclasses.replace(info, free_blocks=pager.free_blocks)
+        return dataclasses.replace(
+            info, free_blocks=pager.free_blocks,
+            prefix_hits=int(getattr(self, "_prefix_hits", 0)),
+            prefix_hit_tokens=int(getattr(self, "_prefix_hit_tokens", 0)),
+            prefix_blocks_cached=pager.allocator.cached_blocks)
 
     @property
     def n_slots(self) -> int:
@@ -277,6 +343,41 @@ class InferenceBackend(abc.ABC):
         prompt token); pipelined backends may return ``[]`` and emit the
         first token from a later ``decode_step``.
         """
+
+    # -- streamed admission (prefix caching + chunked prefill) ---------- #
+    # Optional protocol: backends advertising ``info.supports_extend``
+    # implement these three; the scheduler then admits via
+    # ``start_stream`` + one or more ``prefill_chunk`` calls instead of
+    # the monolithic ``prefill``.  The defaults keep simple backends
+    # (tests' fakes, remote shims) valid without opting in.
+
+    def cached_prefix_len(self, prompt: np.ndarray) -> int:
+        """Advisory: prompt tokens a ``start_stream`` would serve from the
+        prefix cache right now (block-aligned, capped so at least one
+        suffix token remains).  Used for admission budgeting; the
+        authoritative match happens inside ``start_stream``."""
+        return 0
+
+    def start_stream(self, slot: int, prompt: np.ndarray) -> int:
+        """Reset ``slot`` and begin a streamed admission of ``prompt``
+        (int32 [plen], unpadded).  Adopts any cached prefix blocks
+        copy-on-write and returns ``start`` — how many prompt tokens are
+        already in cache (0 on miss or with prefix caching off).  The
+        caller then feeds ``prompt[start:]`` through ``prefill_chunk``."""
+        raise NotImplementedError(type(self).__name__)
+
+    def prefill_chunk(self, slots: Sequence[int], chunks: np.ndarray,
+                      chunk_lens: Sequence[int], starts: Sequence[int],
+                      last: Sequence[bool]) -> List[SlotEvent]:
+        """Continue streamed admissions: write ``chunk_lens[i]`` tokens
+        (right-aligned in ``chunks[i]``, left-padded to the shared width)
+        at absolute positions ``starts[i]..starts[i]+chunk_lens[i]-1`` of
+        ``slots[i]``'s cache, with all earlier keys visible.  Rows with
+        ``last[i]`` finish their prompt; synchronous backends return their
+        first-token events (pipelined backends may return ``[]`` and emit
+        from a later ``decode_step``).  Raises :class:`PoolExhausted`
+        before mutating anything when the pool cannot back the chunk."""
+        raise NotImplementedError(type(self).__name__)
 
     @abc.abstractmethod
     def decode_step(self, feeds: Dict[int, int]) -> List[SlotEvent]:

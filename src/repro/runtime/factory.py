@@ -53,6 +53,7 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
                     schedule: str = "nobubbles", impl: str = "xla",
                     cache_layout: str = "contiguous", block_size: int = 16,
                     num_blocks: Optional[int] = None,
+                    prefix_cache: bool = False,
                     ) -> InferenceBackend:
     """Materialize a planned deployment as a serving backend.
 
@@ -79,7 +80,7 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
                           mb_batch=mb, schedule=schedule,
                           vocab_size=cfg.vocab_size, max_len=max_len,
                           cache_layout=cache_layout, block_size=block_size,
-                          num_blocks=num_blocks)
+                          num_blocks=num_blocks, prefix_cache=prefix_cache)
 
     assert params is not None, f"kind={kind!r} needs model params"
     import jax.numpy as jnp
@@ -92,7 +93,8 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
                              max_len=max_len, mesh=mesh, impl=impl,
                              cache_dtype=cache_dtype,
                              cache_layout=cache_layout,
-                             block_size=block_size, num_blocks=num_blocks)
+                             block_size=block_size, num_blocks=num_blocks,
+                             prefix_cache=prefix_cache)
 
     if kind == "pipeline":
         import jax
@@ -105,6 +107,7 @@ def from_deployment(deployment: Deployment, cluster: ClusterSpec,
                                n_slots=n_slots, lanes=lanes, max_len=max_len,
                                cache_dtype=cache_dtype, impl=impl,
                                cache_layout=cache_layout,
-                               block_size=block_size, num_blocks=num_blocks)
+                               block_size=block_size, num_blocks=num_blocks,
+                               prefix_cache=prefix_cache)
 
     raise ValueError(f"unknown backend kind {kind!r}")

@@ -48,6 +48,7 @@ from repro.models import kvcache as KV
 from repro.models.config import ModelConfig
 from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
                                 SlotEvent, SlotPager)
+from repro.runtime.prefix_cache import PrefixCache
 
 PyTree = Any
 
@@ -62,7 +63,8 @@ class PipelineBackend(InferenceBackend):
                  batch_axes: Tuple[str, ...] = ("data",), impl: str = "xla",
                  cache_layout: str = "contiguous",
                  block_size: int = KV.DEFAULT_BLOCK_SIZE,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         m = n_slots or spec.n_stages
         assert m >= spec.n_stages, \
@@ -85,6 +87,15 @@ class PipelineBackend(InferenceBackend):
             self.num_blocks = num_blocks if num_blocks is not None \
                 else m * nbs
             self.pager = SlotPager(m, self.num_blocks, block_size, nbs)
+        # Prefix sharing rides the paged pool; the model gate mirrors the
+        # tensor backend (all-attention, no effective window at max_len).
+        self._prefix_on = bool(prefix_cache) and self._paged_exec \
+            and KV.prefix_sharing_supported(cfg, max_len)
+        self.prefix: Optional[PrefixCache] = None
+        if self._prefix_on:
+            self.prefix = PrefixCache(self.pager.allocator, block_size)
+        self._prefix_hits = 0
+        self._prefix_hit_tokens = 0
 
         with mesh:
             self.stage_params, self.mask = PL.stack_stage_params(cfg, params,
@@ -115,14 +126,21 @@ class PipelineBackend(InferenceBackend):
         self._tick_fn = jax.jit(_tick if self._paged_exec else _tick_contig)
 
         if self._paged_exec:
-            def _reset(state: PL.PipelineDecodeState,
-                       slot) -> PL.PipelineDecodeState:
+            def _reset(state: PL.PipelineDecodeState, slot,
+                       start) -> PL.PipelineDecodeState:
+                # ``start`` > 0 = streamed admission with an adopted shared
+                # prefix: ring slot == absolute position here (prefix gating
+                # rules out windows), so positions below ``start`` are marked
+                # live and decode resumes at ``start``.
                 caches = {}
                 for key, entry in state.caches.items():
                     if KV.is_paged_attn_cache(entry):
+                        c = entry["key_pos"].shape[-1]
+                        row = jnp.arange(c, dtype=jnp.int32)
+                        row = jnp.where(row < start, row, -1)
                         e = dict(entry)
-                        e["key_pos"] = entry["key_pos"].at[:, :, slot].set(-1)
-                        e["pos"] = entry["pos"].at[:, :, slot].set(0)
+                        e["key_pos"] = entry["key_pos"].at[:, :, slot].set(row)
+                        e["pos"] = entry["pos"].at[:, :, slot].set(start)
                         caches[key] = e
                     else:
                         caches[key] = jax.tree.map(
@@ -171,6 +189,9 @@ class PipelineBackend(InferenceBackend):
         # when the slot was freed and re-admitted
         self._inflight: Dict[int, Tuple[int, int, int]] = {}
         self._epoch: Dict[int, int] = {}
+        self._base: Dict[int, int] = {}        # slot -> adopted prefix length
+        self._stream_done: Dict[int, bool] = {}  # all chunks fed?
+        self._full_tokens: Dict[int, np.ndarray] = {}  # for registration
         self._bt_dev = jnp.asarray(self.pager.table) if self._paged_exec \
             else None
         self._bt_dirty = False
@@ -188,7 +209,11 @@ class PipelineBackend(InferenceBackend):
             free_blocks=self.num_blocks,
             bytes_per_block=KV.block_pool_bytes_per_block(cfg, cache_dtype)
             if cache_layout == "paged" else 0,
-            max_ctx_blocks=nbs if cache_layout == "paged" else 0)
+            max_ctx_blocks=nbs if cache_layout == "paged" else 0,
+            prefix_caching=self._prefix_on,
+            # teacher-forcing feeds one token per tick, so chunked admission
+            # is just a staged feed queue — supported on every layout
+            supports_extend=lanes == 1)
 
     @property
     def info(self) -> BackendInfo:
@@ -224,11 +249,81 @@ class PipelineBackend(InferenceBackend):
                 if self.pager is not None:
                     if self.pager.release(slot):  # blocks grow lazily per tick
                         self._bt_dirty = True
-                self.state = self._reset_fn(self.state, jnp.asarray(slot))
+                self._reset_slot(slot, 0)
                 self._prompts[slot] = prompts[i, prompts.shape[1] - lens[i]:]
                 self._rounds[slot] = 0
                 self._gen_ready[slot] = 0
                 self._epoch[slot] = self._epoch.get(slot, 0) + 1
+                self._base[slot] = 0
+                self._stream_done[slot] = True
+                self._full_tokens.pop(slot, None)
+        return []
+
+    def _reset_slot(self, slot: int, start: int) -> None:
+        if self._paged_exec:
+            self.state = self._reset_fn(self.state, jnp.asarray(slot),
+                                        jnp.int32(start))
+        else:
+            assert start == 0
+            self.state = self._reset_fn(self.state, jnp.asarray(slot))
+
+    # --------------------------- streamed admission ------------------- #
+    def cached_prefix_len(self, prompt: np.ndarray) -> int:
+        if not self._prefix_on:
+            return 0
+        p = np.asarray(prompt, np.int32).ravel()
+        cap = ((len(p) - 1) // self.block_size) * self.block_size
+        return self.prefix.matched_tokens(p[:cap])
+
+    def start_stream(self, slot: int, prompt: np.ndarray) -> int:
+        assert self.lanes == 1, "streamed admission requires lanes == 1"
+        p = np.asarray(prompt, np.int32).ravel()
+        start = 0
+        with self.mesh:
+            if self.pager is not None and self.pager.release(slot):
+                self._bt_dirty = True
+            if self._prefix_on:
+                # never adopt the whole prompt: >= 1 suffix token must run
+                # so the first sampled token exists
+                cap = ((len(p) - 1) // self.block_size) * self.block_size
+                blocks = self.prefix.lookup(p[:cap])
+                if blocks:
+                    start = len(blocks) * self.block_size
+                    self.pager.adopt(slot, blocks)
+                    self._bt_dirty = True
+                    self._prefix_hits += 1
+                    self._prefix_hit_tokens += start
+                self._full_tokens[slot] = p
+            self._reset_slot(slot, start)
+            self._prompts[slot] = np.zeros((0, self.lanes), np.int32)
+            self._rounds[slot] = 0
+            self._gen_ready[slot] = 0
+            self._epoch[slot] = self._epoch.get(slot, 0) + 1
+            self._base[slot] = start
+            self._stream_done[slot] = False
+        return start
+
+    def prefill_chunk(self, slots: Sequence[int], chunks: np.ndarray,
+                      chunk_lens: Sequence[int], starts: Sequence[int],
+                      last: Sequence[bool]) -> List[SlotEvent]:
+        """Queue suffix tokens for the tick loop's teacher-forcing; the
+        chunk is 'prefilled' by subsequent ``decode_step`` ticks, one token
+        per turn, so no event is emitted here (the first sampled token rides
+        the ring after the final prompt token of the *last* chunk)."""
+        chunks = np.asarray(chunks, np.int32)
+        if chunks.ndim == 1:
+            chunks = chunks[None]
+        for i, slot in enumerate(slots):
+            assert slot in self._prompts \
+                and self._stream_done.get(slot) is False, slot
+            n = int(chunk_lens[i])
+            toks = chunks[i, chunks.shape[1] - n:]       # strip left pads
+            fed = self._base.get(slot, 0) + len(self._prompts[slot])
+            assert int(starts[i]) == fed, (starts[i], fed)
+            self._prompts[slot] = np.concatenate(
+                [self._prompts[slot], toks[:, None]])
+            if last[i]:
+                self._stream_done[slot] = True
         return []
 
     def _feed_for(self, slot: int, feeds: Dict[int, int],
@@ -250,10 +345,11 @@ class PipelineBackend(InferenceBackend):
         feed = self._feed_for(slot, feeds)
         valid = feed is not None
         if valid and self._paged_exec:
-            # this tick writes position rounds[slot]; grow the slot's block
-            # table first, raising BEFORE any bookkeeping so the scheduler
-            # can preempt a victim and retry the very same tick
-            pos = self._rounds[slot]
+            # this tick writes position base+rounds[slot] (base = adopted
+            # shared-prefix length); grow the slot's block table first,
+            # raising BEFORE any bookkeeping so the scheduler can preempt a
+            # victim and retry the very same tick
+            pos = self._base.get(slot, 0) + self._rounds[slot]
             need = self.pager.blocks_needed(slot, pos)
             if need > self.pager.free_blocks:
                 raise PoolExhausted(needed=need,
@@ -285,9 +381,20 @@ class PipelineBackend(InferenceBackend):
             return events
         dslot, r, epoch = done
         if dslot in self._prompts and epoch == self._epoch.get(dslot, 0) \
+                and self._stream_done.get(dslot, True) \
                 and r >= len(self._prompts[dslot]) - 1:
             tok = np.asarray(self.state.tokens_out[dslot])     # [lanes]
             self._gen_ready[dslot] += 1
+            full = self._full_tokens.pop(dslot, None)
+            if full is not None and self._prefix_on:
+                # the whole prompt's KV is now resident: publish its full
+                # blocks (generated tokens never land in them — the first
+                # partial block stays private by the // floor)
+                nfull = min(len(full) // self.block_size,
+                            int(self.pager.n_alloc[dslot]))
+                if nfull:
+                    self.prefix.register(
+                        full, self.pager.table[dslot, :nfull].tolist())
             events.append(SlotEvent(
                 slot=dslot,
                 token=int(tok[0]) if self.lanes == 1 else tok))
@@ -297,6 +404,9 @@ class PipelineBackend(InferenceBackend):
         self._prompts.pop(slot, None)
         self._rounds.pop(slot, None)
         self._gen_ready.pop(slot, None)
+        self._base.pop(slot, None)
+        self._stream_done.pop(slot, None)
+        self._full_tokens.pop(slot, None)
         self._epoch[slot] = self._epoch.get(slot, 0) + 1
         if self._paged_exec:
             # a preempted slot may still be riding the ring: kill its

@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.simulator import SimResult, StageCosts
 from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
                                 SlotEvent, SlotPager)
+from repro.runtime.prefix_cache import PrefixCache
 
 
 class SimBackend(InferenceBackend):
@@ -41,7 +42,8 @@ class SimBackend(InferenceBackend):
                  vocab_size: int = 32000, seed: int = 0,
                  max_len: int = 1 << 30,
                  cache_layout: str = "contiguous", block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.costs = costs
         self.mb_batch = mb_batch
@@ -65,13 +67,23 @@ class SimBackend(InferenceBackend):
                 num_blocks = n_slots * 8        # sweep-friendly default
             self.pager = SlotPager(n_slots, num_blocks, block_size, nbs,
                                    table_width=min(nbs, num_blocks))
+        # cost-model-only prefix sharing: block ids are shared/adopted/
+        # registered exactly like the device backends, just with no tensors
+        self._prefix_on = bool(prefix_cache) and self.pager is not None
+        self.prefix: Optional[PrefixCache] = None
+        if self._prefix_on:
+            self.prefix = PrefixCache(self.pager.allocator, block_size)
+        self._prefix_hits = 0
+        self._prefix_hit_tokens = 0
+        self._stream_tokens: Dict[int, np.ndarray] = {}
         self._info = BackendInfo(
             n_slots=n_slots, max_len=max_len, samples_in_backend=True,
             cache_layout=cache_layout,
             block_size=block_size if self.pager else 0,
             total_blocks=self.pager.total_blocks if self.pager else 0,
             free_blocks=self.pager.total_blocks if self.pager else 0,
-            max_ctx_blocks=self.pager.max_ctx_blocks if self.pager else 0)
+            max_ctx_blocks=self.pager.max_ctx_blocks if self.pager else 0,
+            prefix_caching=self._prefix_on, supports_extend=True)
 
     @property
     def info(self) -> BackendInfo:
@@ -122,6 +134,73 @@ class SimBackend(InferenceBackend):
             out.append(self._emit(slot))        # prefill emits the first token
         return out
 
+    # --------------------------- streamed admission ------------------- #
+    def cached_prefix_len(self, prompt: np.ndarray) -> int:
+        if not self._prefix_on:
+            return 0
+        p = np.asarray(prompt, np.int32).ravel()
+        bs = self.pager.block_size
+        cap = ((len(p) - 1) // bs) * bs
+        return self.prefix.matched_tokens(p[:cap])
+
+    def start_stream(self, slot: int, prompt: np.ndarray) -> int:
+        p = np.asarray(prompt, np.int32).ravel()
+        if self.pager is not None:
+            self.pager.release(slot)
+        start = 0
+        if self._prefix_on:
+            bs = self.pager.block_size
+            cap = ((len(p) - 1) // bs) * bs
+            blocks = self.prefix.lookup(p[:cap])
+            if blocks:
+                start = len(blocks) * bs
+                self.pager.adopt(slot, blocks)
+                self._prefix_hits += 1
+                self._prefix_hit_tokens += start
+            self._stream_tokens[slot] = p
+        self._active[slot] = True
+        self._fed[slot] = 0
+        self._seen[slot] = 0
+        self._plen[slot] = start                # grows as chunks land
+        return start
+
+    def prefill_chunk(self, slots: Sequence[int], chunks: np.ndarray,
+                      chunk_lens: Sequence[int], starts: Sequence[int],
+                      last: Sequence[bool]) -> List[SlotEvent]:
+        """Each chunk pays one prefill pass through the stage chain (the
+        cost model has no per-token prefill resolution); the final chunk
+        emits the first sampled token, like :meth:`prefill`."""
+        if self.pager is not None:
+            need = sum(max(self.pager.blocks_for_len(
+                int(starts[i]) + int(chunk_lens[i]))
+                - int(self.pager.n_alloc[s]), 0)
+                for i, s in enumerate(slots))
+            if need > self.pager.free_blocks:   # atomic: nothing mutates
+                raise PoolExhausted(needed=need,
+                                    free=self.pager.free_blocks)
+            for i, s in enumerate(slots):
+                end = int(starts[i]) + int(chunk_lens[i])
+                if end:
+                    self.pager.ensure(s, end - 1)
+        out = []
+        for i, slot in enumerate(slots):
+            assert self._active[slot], slot
+            assert int(starts[i]) == self._plen[slot], \
+                (starts[i], self._plen[slot])
+            self._plen[slot] += int(chunk_lens[i])
+            self._run_through_stages(slot, prefill=True)
+            if last[i]:
+                toks = self._stream_tokens.pop(slot, None)
+                if toks is not None and self._prefix_on:
+                    bs = self.pager.block_size
+                    nfull = min(len(toks) // bs,
+                                int(self.pager.n_alloc[slot]))
+                    if nfull:
+                        self.prefix.register(
+                            toks, self.pager.table[slot, :nfull].tolist())
+                out.append(self._emit(slot))
+        return out
+
     def decode_step(self, feeds: Dict[int, int]) -> List[SlotEvent]:
         live = [s for s in sorted(feeds) if self._active[s]]
         if not live:
@@ -147,6 +226,7 @@ class SimBackend(InferenceBackend):
 
     def free_slot(self, slot: int) -> None:
         self._active[slot] = False
+        self._stream_tokens.pop(slot, None)
         if self.pager is not None:
             self.pager.release(slot)
 

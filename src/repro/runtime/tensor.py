@@ -50,6 +50,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
                                 SlotEvent, SlotPager)
+from repro.runtime.prefix_cache import PrefixCache
 from repro.sharding.rules import use_mesh
 
 PyTree = Any
@@ -71,7 +72,8 @@ class TensorBackend(InferenceBackend):
                  max_len: int, mesh=None, impl: str = "xla",
                  cache_dtype=jnp.float32, cache_layout: str = "contiguous",
                  block_size: int = KV.DEFAULT_BLOCK_SIZE,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.cfg = cfg
         self.params = params
@@ -93,6 +95,20 @@ class TensorBackend(InferenceBackend):
             self.num_blocks = num_blocks if num_blocks is not None \
                 else n_slots * nbs
             self.pager = SlotPager(n_slots, self.num_blocks, block_size, nbs)
+
+        # streamed admission (prefix reuse + chunked prefill) needs ring
+        # slot == absolute position: paged layout, all-attention, no
+        # effective window.  Unsupported deployments silently keep the
+        # monolithic path (the --prefix-cache "contiguous ignore" contract).
+        self._extend_ok = self._paged_exec and \
+            KV.prefix_sharing_supported(cfg, max_len)
+        self._prefix_on = bool(prefix_cache) and self._extend_ok
+        self.prefix: Optional[PrefixCache] = None
+        if self._prefix_on:
+            self.prefix = PrefixCache(self.pager.allocator, block_size)
+        self._prefix_hits = 0
+        self._prefix_hit_tokens = 0
+        self._stream_tokens: Dict[int, np.ndarray] = {}
 
         if self._paged_exec:
             self.caches = T.init_paged_caches(cfg, n_slots, max_len,
@@ -116,6 +132,11 @@ class TensorBackend(InferenceBackend):
             self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
             self._scatter_fn = jax.jit(self._scatter_paged,
                                        donate_argnums=(0,))
+            if self._extend_ok:
+                self._extend_fn = jax.jit(functools.partial(
+                    T.extend_step, cfg, impl=impl), donate_argnums=(2,))
+                self._reset_stream_fn = jax.jit(self._reset_stream,
+                                                donate_argnums=(0,))
         else:
             def _decode(params, tokens, caches):
                 logits, new = jax.vmap(
@@ -142,7 +163,9 @@ class TensorBackend(InferenceBackend):
             free_blocks=self.num_blocks,
             bytes_per_block=KV.block_pool_bytes_per_block(cfg, cache_dtype)
             if cache_layout == "paged" else 0,
-            max_ctx_blocks=nbs if cache_layout == "paged" else 0)
+            max_ctx_blocks=nbs if cache_layout == "paged" else 0,
+            prefix_caching=self._prefix_on,
+            supports_extend=self._extend_ok)
 
     @property
     def info(self) -> BackendInfo:
@@ -260,6 +283,126 @@ class TensorBackend(InferenceBackend):
                 "tail", [(f"t{t}", s) for t, s in enumerate(self.cfg.tail)])
         return result
 
+    def _reset_stream(self, caches: PyTree, slot: jax.Array,
+                      start: jax.Array) -> PyTree:
+        """Wipe one slot's paged ring view for a streamed admission: mark
+        positions below ``start`` (the adopted prefix, whose blocks the
+        host just wired into the table) as valid keys, everything above as
+        empty — stale keys from the slot's previous occupant must never be
+        attended."""
+        def fix(entry, stacked):
+            if not KV.is_paged_attn_cache(entry):
+                return entry
+            e = dict(entry)
+            c_pad = entry["key_pos"].shape[-1]
+            row = jnp.where(jnp.arange(c_pad, dtype=jnp.int32) < start,
+                            jnp.arange(c_pad, dtype=jnp.int32), -1)
+            if stacked:                                  # key_pos [L, B, C]
+                e["key_pos"] = entry["key_pos"].at[:, slot].set(row[None])
+                e["pos"] = entry["pos"].at[:, slot].set(start)
+            else:
+                e["key_pos"] = entry["key_pos"].at[slot].set(row)
+                e["pos"] = entry["pos"].at[slot].set(start)
+            return e
+
+        out = dict(caches)
+        if "stack" in out:
+            out["stack"] = {k: fix(v, True) for k, v in out["stack"].items()}
+        if "tail" in out:
+            out["tail"] = {k: fix(v, False) for k, v in out["tail"].items()}
+        return out
+
+    # ------------------------------------------------------------------ #
+    # streamed admission: prefix adoption + chunked/offset prefill
+    # ------------------------------------------------------------------ #
+    def cached_prefix_len(self, prompt: np.ndarray) -> int:
+        if not self._prefix_on:
+            return 0
+        p = np.asarray(prompt).ravel()
+        cap = ((len(p) - 1) // self.block_size) * self.block_size
+        return self.prefix.matched_tokens(p[:cap])
+
+    def start_stream(self, slot: int, prompt: np.ndarray) -> int:
+        assert self._extend_ok, "backend does not advertise supports_extend"
+        prompt = np.asarray(prompt, np.int32).ravel()
+        plen = len(prompt)
+        assert plen >= 1
+        self.pager.release(slot)
+        start = 0
+        if self._prefix_on:
+            # cap so at least one suffix token remains to produce logits
+            cap = ((plen - 1) // self.block_size) * self.block_size
+            blocks = self.prefix.lookup(prompt[:cap])
+            start = len(blocks) * self.block_size
+            if start:
+                self.pager.adopt(slot, blocks)
+                self._prefix_hits += 1
+                self._prefix_hit_tokens += start
+        with use_mesh(self.mesh):
+            self.caches = self._reset_stream_fn(
+                self.caches, jnp.int32(slot), jnp.int32(start))
+        self._stream_tokens[slot] = prompt
+        self._pos[slot] = start
+        self._active[slot] = True
+        return start
+
+    def prefill_chunk(self, slots: Sequence[int], chunks: np.ndarray,
+                      chunk_lens: Sequence[int], starts: Sequence[int],
+                      last: Sequence[bool]) -> List[SlotEvent]:
+        chunks = np.atleast_2d(np.asarray(chunks, np.int32))
+        k, w = chunks.shape
+        lens = np.asarray(chunk_lens, np.int32)
+        sts = np.asarray(starts, np.int64)
+        assert len(slots) == k and lens.shape == (k,) and sts.shape == (k,)
+        assert np.all(lens >= 1) and np.all(lens <= w)
+        # atomic growth check: raise before any table mutates so the
+        # scheduler can preempt and retry the whole chunk wave
+        need = sum(
+            max(self.pager.blocks_for_len(int(st + ln))
+                - int(self.pager.n_alloc[s]), 0)
+            for s, st, ln in zip(slots, sts, lens))
+        if need > self.pager.free_blocks:
+            raise PoolExhausted(needed=need, free=self.pager.free_blocks)
+        for s, st, ln in zip(slots, sts, lens):
+            self.pager.ensure(s, int(st + ln) - 1)
+        self._push_tables()
+        # extend_step works in slot space [n_slots, w]: scatter the wave's
+        # rows to their slots and make every other row a no-op (len 0 =>
+        # all writes masked to scratch, start=pos => pos unchanged), so each
+        # chunk width compiles once regardless of wave composition
+        full_chunks = np.zeros((self.n_slots, w), np.int32)
+        full_lens = np.zeros(self.n_slots, np.int32)
+        full_starts = np.asarray(self._pos, np.int32).copy()
+        for i, s in enumerate(slots):
+            full_chunks[s] = chunks[i]
+            full_lens[s] = lens[i]
+            full_starts[s] = sts[i]
+        with use_mesh(self.mesh):
+            logits, self.caches = self._extend_fn(
+                self.params, jnp.asarray(full_chunks), self.caches,
+                jnp.asarray(full_starts), jnp.asarray(full_lens))
+        last_logits = np.asarray(logits[:, -1], np.float32)
+        events = []
+        for i, s in enumerate(slots):
+            self._pos[s] = int(sts[i] + lens[i])
+            if last[i]:
+                if self._prefix_on:
+                    self._register_stream(s)
+                self._stream_tokens.pop(s, None)
+                events.append(SlotEvent(slot=s, logits=last_logits[s]))
+        return events
+
+    def _register_stream(self, slot: int) -> None:
+        """Index the finished stream's full token blocks for future reuse."""
+        toks = self._stream_tokens.get(slot)
+        if toks is None:
+            return
+        nfull = len(toks) // self.block_size
+        nfull = min(nfull, int(self.pager.n_alloc[slot]))
+        if nfull:
+            blocks = self.pager.table[slot, :nfull].tolist()
+            self.prefix.register(toks, blocks)
+
     def _push_tables(self) -> None:
         """Refresh the device block-table leaves from the host pager."""
         table = jnp.asarray(self.pager.table)
@@ -370,6 +513,8 @@ class TensorBackend(InferenceBackend):
     def free_slot(self, slot: int) -> None:
         # contiguous storage is fully overwritten on the next prefill; the
         # paged pool returns the slot's blocks to the free list immediately
+        # (prefix-indexed blocks park in the cached-free LRU instead)
         self._active[slot] = False
+        self._stream_tokens.pop(slot, None)
         if self.pager is not None:
             self.pager.release(slot)

@@ -54,11 +54,24 @@ def sample_logits(key: jax.Array, logits: jax.Array,
 
 
 class ServeEngine:
-    """Batched prefill + decode over a fixed model and cache budget."""
+    """Batched prefill + decode over a fixed model and cache budget.
+
+    .. deprecated::
+        ``ServeEngine`` predates the unified runtime and serves whole fixed
+        batches with no continuous admission, paging, or prefix reuse.  Use
+        :class:`repro.serving.LLM` over a backend instead (an existing
+        engine can be wrapped directly: ``LLM.from_backend(engine)``).
+    """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, max_batch: int,
                  max_len: int, mesh=None, impl: str = "xla",
                  cache_dtype=jnp.float32):
+        import warnings
+        warnings.warn(
+            "ServeEngine is deprecated: use serving.LLM over a runtime "
+            "backend (LLM.from_backend(TensorBackend(...)) or "
+            "LLM.from_plan(...)); LLM.from_backend(engine) also accepts a "
+            "legacy engine directly", DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch

@@ -63,9 +63,10 @@ class LLM:
     """Streaming serving facade over one :class:`InferenceBackend`."""
 
     def __init__(self, backend, *, seed: int = 0, min_bucket: int = 1,
-                 pad_id: int = 0):
+                 pad_id: int = 0, prefill_chunk: Optional[int] = None):
         self.batcher = ContinuousBatcher(backend, seed=seed,
-                                         min_bucket=min_bucket, pad_id=pad_id)
+                                         min_bucket=min_bucket, pad_id=pad_id,
+                                         prefill_chunk=prefill_chunk)
         self.backend = self.batcher.backend
         self.deployment = None          # set by from_plan
 
@@ -86,6 +87,8 @@ class LLM:
                   seed: int = 0, min_bucket: int = 1, pad_id: int = 0,
                   cache_layout: str = "contiguous", block_size: int = 16,
                   num_blocks: Optional[int] = None,
+                  prefix_cache: bool = False,
+                  prefill_chunk: Optional[int] = None,
                   ) -> "LLM":
         """Plan → backend → serving in one call (the paper's Fig. 3 flow).
 
@@ -100,6 +103,12 @@ class LLM:
         (``num_blocks`` × ``block_size``-token blocks; sized for no
         overcommit when ``num_blocks`` is omitted) with block-budget
         admission and preempt/resume overcommit — see docs/runtime.md.
+
+        ``prefix_cache=True`` (paged only) content-addresses full prompt
+        blocks so shared prefixes are adopted copy-on-write instead of
+        recomputed; ``prefill_chunk=N`` streams long prompts through
+        prefill N tokens per scheduler quantum, interleaved with decode.
+        Both are semantically invisible (greedy outputs are identical).
         """
         from repro.core.planner import plan_deployment
         from repro.core.profile import Workload
@@ -113,8 +122,10 @@ class LLM:
                                   schedule=schedule, impl=impl,
                                   cache_layout=cache_layout,
                                   block_size=block_size,
-                                  num_blocks=num_blocks)
-        llm = cls(backend, seed=seed, min_bucket=min_bucket, pad_id=pad_id)
+                                  num_blocks=num_blocks,
+                                  prefix_cache=prefix_cache)
+        llm = cls(backend, seed=seed, min_bucket=min_bucket, pad_id=pad_id,
+                  prefill_chunk=prefill_chunk)
         llm.deployment = dep
         return llm
 

@@ -58,8 +58,11 @@ class SchedulerStats:
     exhausted: bool = False             # run() hit max_steps with work left
     preemptions: int = 0                # pool-exhaustion evictions (paged)
     resumes: int = 0                    # preempted requests re-admitted
+    prefix_hits: int = 0                # admissions that adopted cached blocks
+    prefix_hit_tokens: int = 0          # prompt tokens skipped via adoption
+    prefill_chunks: int = 0             # per-slot chunk passes (streamed)
     prefill_shapes: Dict[int, int] = field(default_factory=dict)
-    # ^ bucketed prompt length -> number of admission waves at that shape
+    # ^ bucketed prompt/chunk length -> number of admission waves at that shape
 
     @property
     def utilization(self) -> float:
@@ -116,11 +119,19 @@ class ContinuousBatcher:
     def __init__(self, backend, seed: int = 0, *, min_bucket: int = 1,
                  pad_id: int = 0,
                  on_token: Optional[Callable[[TokenEvent], None]] = None,
-                 reserve_blocks: Optional[int] = None):
+                 reserve_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.backend: InferenceBackend = _as_backend(backend)
         self.min_bucket = min_bucket
         self.pad_id = pad_id
         self.on_token = on_token
+        #: chunked prefill: cap each streamed-admission prefill pass at this
+        #: many prompt tokens per scheduler quantum (None = whole suffix in
+        #: one pass).  Takes effect on backends advertising
+        #: ``supports_extend``; others keep monolithic prefill.
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
         #: paged admission head-room: keep this many free blocks when
         #: admitting so running requests can still grow.  None = dynamic
         #: (one block per currently-running request).
@@ -143,6 +154,9 @@ class ContinuousBatcher:
         self._resume: Dict[int, np.ndarray] = {}   # uid -> unpadded prefix
         self._admit_seq: Dict[int, int] = {}       # uid -> admission order
         self._n_admitted = 0
+        # streamed admission (prefix cache / chunked prefill):
+        # slot -> {"tokens": unpadded prefix, "fed": tokens prefilled so far}
+        self._chunking: Dict[int, Dict] = {}
 
     # ------------------------------------------------------------------ #
     # submission
@@ -170,7 +184,9 @@ class ContinuousBatcher:
         if plen > max_len:
             raise ValueError(
                 f"request {req.uid}: prompt length {plen} exceeds the "
-                f"backend's max_len {max_len}")
+                f"backend's max_len {max_len}; serve with max_len >= "
+                f"{plen + req.params.max_tokens - 1} to also fit "
+                f"max_tokens={req.params.max_tokens}")
         if plen + req.params.max_tokens - 1 > max_len:
             # past max_len, KV writes clamp/drop silently and every later
             # token is computed against a corrupted cache — reject up front.
@@ -191,9 +207,12 @@ class ContinuousBatcher:
                 min(plen + req.params.max_tokens - 1, max_len))
             if worst > info.total_blocks:
                 raise ValueError(
-                    f"request {req.uid}: needs up to {worst} KV blocks but "
-                    f"the pool has only {info.total_blocks}; shrink "
-                    f"max_tokens or serve with more blocks")
+                    f"request {req.uid}: prompt length {plen} + max_tokens "
+                    f"{req.params.max_tokens} spans up to {worst} KV blocks "
+                    f"of {info.block_size} tokens, but the pool holds only "
+                    f"{info.total_blocks} blocks total; serve with "
+                    f"--kv-blocks >= {worst} (or shrink max_tokens to <= "
+                    f"{max(info.total_blocks * info.block_size - plen, 0)})")
         if req.params.temperature > 0.0 and \
                 self.backend.info.samples_in_backend:
             raise ValueError(
@@ -300,6 +319,7 @@ class ContinuousBatcher:
         req = self._slot_req.pop(slot)
         self.backend.free_slot(slot)
         self._feeds.pop(slot, None)
+        self._chunking.pop(slot, None)  # a mid-stream victim re-streams from 0
         self._free.append(slot)
         self._resume[req.uid] = np.concatenate(
             [np.asarray(req.prompt, np.int32),
@@ -368,6 +388,54 @@ class ContinuousBatcher:
             if self.on_token is not None:
                 self.on_token(event)
 
+    def _pump_chunks(self, out: List[TokenEvent]) -> None:
+        """Feed each mid-stream slot its next prompt chunk — one chunk per
+        slot per quantum, so decode ticks interleave between a long prompt's
+        chunks and running requests never stall behind it (no head-of-line
+        blocking).  Chunks are grouped by bucketed width, keeping the same
+        bounded power-of-two XLA shape set as whole-prompt prefill; the
+        final chunk's events carry the first sampled token."""
+        waves: Dict[int, List[int]] = {}
+        for slot, st in self._chunking.items():
+            n = len(st["tokens"]) - st["fed"]
+            if self.prefill_chunk is not None:
+                n = min(n, self.prefill_chunk)
+            waves.setdefault(self._bucket(n), []).append(slot)
+        for width, slots in sorted(waves.items()):
+            lens: List[int] = []
+            starts: List[int] = []
+            last: List[bool] = []
+            padded = np.full((len(slots), width), self.pad_id, np.int32)
+            for i, slot in enumerate(slots):
+                st = self._chunking[slot]
+                total, fed = len(st["tokens"]), st["fed"]
+                n = total - fed
+                if self.prefill_chunk is not None:
+                    n = min(n, self.prefill_chunk)
+                padded[i, width - n:] = st["tokens"][fed:fed + n]
+                lens.append(n)
+                starts.append(fed)
+                last.append(fed + n >= total)
+            try:
+                events = self.backend.prefill_chunk(slots, padded, lens,
+                                                    starts, last)
+            except PoolExhausted:
+                # nothing mutated (the backend checks the whole wave before
+                # touching the pool): preempt a victim and retry the same
+                # chunks next quantum
+                if not self._preempt_youngest():
+                    raise
+                return
+            for slot, n, done in zip(slots, lens, last):
+                if done:
+                    del self._chunking[slot]
+                else:
+                    self._chunking[slot]["fed"] += n
+            self.stats.prefill_chunks += len(slots)
+            self.stats.prefill_shapes[width] = \
+                self.stats.prefill_shapes.get(width, 0) + 1
+            self._handle(events, out)
+
     def step(self) -> List[TokenEvent]:
         """Advance one scheduler quantum: release staged arrivals, admit
         bucketed waves into free slots, run one backend decode quantum.
@@ -390,8 +458,44 @@ class ContinuousBatcher:
         # one prefill call per length bucket keeps XLA shapes bounded
         info = self.backend.info
         budget = self._admit_block_budget()
+        # streamed admission whenever there is something to gain from it:
+        # a prefix cache to hit, or chunking requested on a backend that
+        # can extend a partially-prefilled slot
+        use_stream = info.prefix_caching or \
+            (self.prefill_chunk is not None and info.supports_extend)
         while self.queue and self._free:
             head = self.queue[0]
+            if use_stream:
+                # singleton admission: the backend adopts any cached prefix
+                # blocks now (copy-on-write incref, no compute) and the
+                # chunk pump below prefills the remaining suffix.  Resumed
+                # requests route through the same path — their recompute
+                # prefix can itself hit the cache.
+                prefix = self._resume.get(head.uid)
+                tokens = np.asarray(
+                    head.prompt if prefix is None else prefix, np.int32)
+                need = info.blocks_for_len(len(tokens))
+                if budget is not None and need > budget:
+                    break
+                req = self.queue.popleft()
+                slot = self._free.popleft()
+                start = self.backend.start_stream(slot, tokens)
+                if prefix is not None:
+                    del self._resume[req.uid]
+                    self.stats.resumes += 1
+                self._slot_req[slot] = req
+                req.timing.admit_step = self.step_no
+                req.timing.admitted_s = time.perf_counter()
+                self._n_admitted += 1
+                self._admit_seq[req.uid] = self._n_admitted
+                self._chunking[slot] = {"tokens": tokens, "fed": start}
+                self.stats.prefills += 1
+                if start:
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_hit_tokens += start
+                if budget is not None:
+                    budget = max(budget - need, 0)
+                continue
             if head.uid in self._resume:
                 # resumed requests re-prefill their prefix (prompt +
                 # generated tokens) as a singleton wave, bucketed through
@@ -460,6 +564,8 @@ class ContinuousBatcher:
             if budget is not None:
                 budget = max(budget - need, 0)
             self._handle(events, out)
+        if self._chunking:
+            self._pump_chunks(out)
         if self._slot_req:
             self.stats.decode_steps += 1
             self.stats.slot_total_steps += self.backend.n_slots

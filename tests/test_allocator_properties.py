@@ -1,0 +1,270 @@
+"""Property suite for the paged-KV bookkeeping: BlockAllocator + SlotPager.
+
+Interleavings of alloc / incref / free / release / adopt (plus the prefix
+index driving cached-free parking and eviction) must never double-free,
+never leak, and keep the pool partition exact:
+
+    free + cached_free + live == num_blocks
+    refcount[b] == number of block-table references to b
+
+The op-sequence interpreter mirrors the backends' streamed-admission
+lifecycle (release -> lookup -> adopt -> ensure suffix -> decode growth ->
+register at completion -> free).  A seeded random walk always runs; when
+hypothesis is available the same interpreter is additionally driven by
+generated op sequences (gated like the kernel property tests).
+
+Everything here is host-side numpy bookkeeping — no jax required.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.base import BlockAllocator, PoolExhausted, SlotPager
+from repro.runtime.prefix_cache import PrefixCache
+
+try:        # only the generated-sequence sweep needs hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------- #
+# invariant checker
+# --------------------------------------------------------------------- #
+def check_invariants(pager: SlotPager, prefix: PrefixCache = None) -> None:
+    al = pager.allocator
+    free = al._free
+    cached = list(al._cached)
+    live = {b for b in range(al.num_blocks) if al.refcount[b] > 0}
+
+    # no duplicates inside either list, and the three states partition the
+    # pool exactly: a block is free xor cached-free xor live
+    assert len(set(free)) == len(free), "free list holds a duplicate"
+    assert len(set(cached)) == len(cached)
+    states = set(free) | set(cached) | live
+    assert not set(free) & set(cached)
+    assert not set(free) & live, "live block on the free list"
+    assert not set(cached) & live, "live block in the cached-free LRU"
+    assert len(free) + len(cached) + len(live) == al.num_blocks == len(states)
+    assert al.free_blocks == len(free) + len(cached)
+    assert (al.refcount >= 0).all()
+
+    # every refcount is explained by block-table references
+    refs = np.zeros(al.num_blocks, np.int64)
+    for s in range(pager.table.shape[0]):
+        n = int(pager.n_alloc[s])
+        held = pager.table[s, :n]
+        assert (held >= 0).all(), f"slot {s} table has an unmapped hole"
+        assert (pager.table[s, n:] == -1).all()
+        for b in held:
+            refs[int(b)] += 1
+    np.testing.assert_array_equal(refs, al.refcount)
+
+    if prefix is not None:
+        # indexed blocks are live or cached-free — never plain free
+        for b in prefix._key_of:
+            assert b not in set(free), f"indexed block {b} was plain-freed"
+        assert prefix.n_indexed == len(prefix._key_of)
+
+
+# --------------------------------------------------------------------- #
+# op-sequence interpreter (shared by the random walk and hypothesis)
+# --------------------------------------------------------------------- #
+class Machine:
+    """Streamed-admission lifecycle over one pager + prefix index."""
+
+    def __init__(self, n_slots=4, num_blocks=10, block_size=4,
+                 max_ctx_blocks=6):
+        self.pager = SlotPager(n_slots, num_blocks, block_size,
+                               max_ctx_blocks)
+        self.prefix = PrefixCache(self.pager.allocator, block_size)
+        self.toks = {}      # slot -> prompt tokens while a stream is live
+        self.pos = {}       # slot -> highest ensured length
+
+    def admit(self, slot, tokens):
+        """release -> lookup -> adopt cached prefix -> ensure suffix."""
+        self.free(slot)
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) == 0:
+            return False
+        bs = self.pager.block_size
+        cap = (len(tokens) - 1) // bs * bs
+        blocks = self.prefix.lookup(tokens[:cap])
+        self.pager.adopt(slot, blocks)
+        try:
+            self.pager.ensure(slot, len(tokens) - 1)
+        except PoolExhausted:
+            self.pager.release(slot)        # atomic: adoption rolled back
+            return False
+        self.toks[slot] = tokens
+        self.pos[slot] = len(tokens)
+        return True
+
+    def grow(self, slot, k=1):
+        """Decode growth: extend the stream by k positions."""
+        if slot not in self.toks:
+            return
+        cap = self.pager.max_ctx_blocks * self.pager.block_size
+        p = min(self.pos[slot] + k, cap)
+        try:
+            self.pager.ensure(slot, p - 1)
+        except PoolExhausted:
+            return                          # nothing mutated
+        self.pos[slot] = p
+
+    def register(self, slot):
+        """Stream completed: index its full token blocks."""
+        if slot not in self.toks:
+            return
+        t = self.toks[slot]
+        nfull = min(len(t) // self.pager.block_size,
+                    int(self.pager.n_alloc[slot]))
+        self.prefix.register(t, self.pager.table[slot, :nfull].tolist())
+
+    def free(self, slot):
+        self.pager.release(slot)
+        self.toks.pop(slot, None)
+        self.pos.pop(slot, None)
+
+    def finish(self):
+        """Free everything; the pool must come back whole (no leaks)."""
+        for s in range(self.pager.table.shape[0]):
+            self.free(s)
+        al = self.pager.allocator
+        assert al.free_blocks == al.num_blocks, "leaked blocks"
+        assert (al.refcount == 0).all()
+
+
+def run_ops(ops, **machine_kw):
+    """ops: sequence of (kind, slot, payload); invariants after every op."""
+    m = Machine(**machine_kw)
+    n_slots = m.pager.table.shape[0]
+    for kind, slot, payload in ops:
+        slot = slot % n_slots
+        if kind == "admit":
+            m.admit(slot, payload)
+        elif kind == "grow":
+            m.grow(slot, payload)
+        elif kind == "register":
+            m.register(slot)
+        elif kind == "free":
+            m.free(slot)
+        check_invariants(m.pager, m.prefix)
+    m.finish()
+    check_invariants(m.pager, m.prefix)
+
+
+# --------------------------------------------------------------------- #
+# deterministic unit cases (always run)
+# --------------------------------------------------------------------- #
+def test_alloc_is_atomic_on_exhaustion():
+    al = BlockAllocator(4)
+    got = al.alloc(3)
+    with pytest.raises(PoolExhausted):
+        al.alloc(2)
+    assert al.free_blocks == 1          # nothing was taken by the failure
+    al.free(got)
+    assert al.free_blocks == 4
+
+
+def test_double_free_asserts():
+    al = BlockAllocator(2)
+    (b,) = al.alloc(1)
+    al.free([b])
+    with pytest.raises(AssertionError, match="double free"):
+        al.free([b])
+
+
+def test_cached_free_lru_park_evict_resurrect():
+    al = BlockAllocator(3)
+    evicted = []
+    al.on_evict = evicted.append
+    a, b, c = al.alloc(3)
+    al.register(a)
+    al.register(b)
+    al.free([a])                        # parks (oldest)
+    al.free([b])                        # parks (newest)
+    al.free([c])                        # unregistered -> plain free list
+    assert al.free_blocks == 3 and al.cached_blocks == 2
+
+    # plain free list is preferred; no eviction yet
+    (x,) = al.alloc(1)
+    assert x == c and not evicted
+
+    # resurrect the newer cached block; the older one is still parked
+    al.incref(b)
+    assert al.cached_blocks == 1
+
+    # pool dry -> LRU eviction of `a`, with the callback
+    (y,) = al.alloc(1)
+    assert y == a and evicted == [a]
+    with pytest.raises(PoolExhausted):
+        al.alloc(1)
+
+
+def test_incref_of_plain_free_block_asserts():
+    al = BlockAllocator(2)
+    (b,) = al.alloc(1)
+    al.free([b])                        # unregistered: plain free
+    with pytest.raises(AssertionError):
+        al.incref(b)
+
+
+def test_adopt_shares_and_release_returns():
+    pager = SlotPager(n_slots=2, num_blocks=6, block_size=4,
+                      max_ctx_blocks=4)
+    pager.ensure(0, 7)                  # slot 0 holds 2 blocks
+    held = pager.table[0, :2].tolist()
+    pager.adopt(1, held)                # COW share into slot 1
+    assert (pager.allocator.refcount[held] == 2).all()
+    check_invariants(pager)
+    pager.release(0)                    # shared blocks stay live
+    assert (pager.allocator.refcount[held] == 1).all()
+    pager.release(1)
+    assert pager.free_blocks == 6
+    pager.ensure(0, 0)                  # adopt is admission-only: slot empty
+    with pytest.raises(AssertionError, match="non-empty"):
+        pager.adopt(0, [pager.table[0, 0]])
+
+
+def test_random_walk_interleavings():
+    """Seeded random walks over the full lifecycle — always runs, so the
+    invariants are exercised even without hypothesis installed."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        ops = []
+        for _ in range(60):
+            kind = rng.choice(["admit", "grow", "register", "free"],
+                              p=[0.4, 0.25, 0.2, 0.15])
+            slot = int(rng.integers(0, 4))
+            if kind == "admit":
+                # tiny alphabet so prefixes collide and adoption happens
+                n = int(rng.integers(1, 17))
+                payload = rng.integers(0, 3, n).astype(np.int32)
+            elif kind == "grow":
+                payload = int(rng.integers(1, 5))
+            else:
+                payload = None
+            ops.append((kind, slot, payload))
+        run_ops(ops, n_slots=4, num_blocks=10, block_size=4,
+                max_ctx_blocks=6)
+
+
+# --------------------------------------------------------------------- #
+# hypothesis sweep (gated like tests/test_kernels.py)
+# --------------------------------------------------------------------- #
+if HAS_HYPOTHESIS:
+    _op = st.one_of(
+        st.tuples(st.just("admit"), st.integers(0, 3),
+                  st.lists(st.integers(0, 2), min_size=1, max_size=16)),
+        st.tuples(st.just("grow"), st.integers(0, 3), st.integers(1, 4)),
+        st.tuples(st.just("register"), st.integers(0, 3), st.none()),
+        st.tuples(st.just("free"), st.integers(0, 3), st.none()),
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(ops=st.lists(_op, max_size=80),
+           num_blocks=st.integers(4, 16))
+    def test_property_no_leak_no_double_free(ops, num_blocks):
+        run_ops(ops, n_slots=4, num_blocks=num_blocks, block_size=4,
+                max_ctx_blocks=6)

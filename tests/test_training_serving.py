@@ -9,7 +9,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import ContinuousBatcher, Request, SamplingParams, ServeEngine
+from repro.runtime import TensorBackend
+from repro.serving import (LLM, ContinuousBatcher, Request, SamplingParams,
+                           ServeEngine)
 from repro.training import (AdamWConfig, DataConfig, TrainConfig, adamw_init,
                             adamw_update, latest_checkpoint, make_dataset,
                             restore_checkpoint, save_checkpoint, train)
@@ -103,10 +105,13 @@ def test_byte_corpus(tmp_path):
     np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
 
 
-def test_serve_engine_generate_greedy_deterministic():
+def test_serve_engine_backcompat_deprecated_but_working():
+    """The legacy whole-batch engine still serves (one back-compat test),
+    but constructing it warns, pointing at serving.LLM."""
     cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=4, max_len=64)
+    with pytest.warns(DeprecationWarning, match="serving.LLM"):
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=64)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (4, 8)).astype(np.int32)
     a = eng.generate(prompts, SamplingParams(max_tokens=6))
@@ -115,13 +120,14 @@ def test_serve_engine_generate_greedy_deterministic():
     assert a.shape == (4, 6)
 
 
-def test_serve_engine_generate_matches_manual_decode():
+def test_llm_generate_matches_manual_decode():
     cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    llm = LLM.from_backend(TensorBackend(cfg, params, n_slots=2, max_len=64))
     prompts = np.random.default_rng(1).integers(
         0, cfg.vocab_size, (2, 8)).astype(np.int32)
-    out = eng.generate(prompts, SamplingParams(max_tokens=4))
+    outs = llm.generate(prompts, SamplingParams(max_tokens=4))
+    out = np.asarray([o.tokens for o in outs], np.int32)
     # manual: prefill, then argmax-decode
     caches = T.init_caches(cfg, 2, 64, jnp.float32)
     logits, caches, _ = T.forward(cfg, params, jnp.asarray(prompts),
@@ -138,8 +144,8 @@ def test_serve_engine_generate_matches_manual_decode():
 def test_continuous_batcher_serves_all_requests():
     cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
-    sched = ContinuousBatcher(eng)
+    sched = ContinuousBatcher(TensorBackend(cfg, params, n_slots=2,
+                                            max_len=64))
     rng = np.random.default_rng(2)
     for uid in range(5):
         sched.submit(Request(rng.integers(0, cfg.vocab_size, 8)
@@ -155,7 +161,8 @@ def test_continuous_batcher_serves_all_requests():
 def test_score_loglikelihood():
     cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
     params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
                               cfg.vocab_size)
     ll = eng.score(toks)
