@@ -11,7 +11,8 @@ and never pads a prompt:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode tp --batch 4 --gen 16 [--kvint8] [--stream] [--varlen] \
-        [--cache-layout paged --impl pallas]
+        [--cache-layout paged --impl pallas] \
+        [--policy edf --ttft-slo 8 --e2e-slo 64]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode pipeline --stages 4            # devices default to --stages
 """
@@ -82,8 +83,36 @@ def main():
                     help="pipeline stages (pipeline mode)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they decode (streaming API)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "edf"],
+                    help="admission/preemption policy (serving.sched): "
+                         "arrival order, service-class priority, or "
+                         "earliest-deadline-first over --ttft-slo/--e2e-slo")
+    ap.add_argument("--priority", type=int, default=None,
+                    help="service-class priority for every request "
+                         "(higher = served first under --policy priority)")
+    ap.add_argument("--ttft-slo", type=int, default=None,
+                    help="first-token deadline in scheduler steps from "
+                         "arrival (drives --policy edf; misses are counted "
+                         "in the scheduler stats)")
+    ap.add_argument("--e2e-slo", type=int, default=None,
+                    help="completion deadline in scheduler steps from "
+                         "arrival (see --ttft-slo)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.policy != "fifo" and args.priority is None \
+            and args.ttft_slo is None and args.e2e_slo is None:
+        ap.error(
+            f"--policy {args.policy} without --priority/--ttft-slo/--e2e-slo "
+            f"degenerates to FIFO (every request gets the default service "
+            f"class): pass the service-class flags the policy orders by, or "
+            f"drop --policy")
+    if args.policy == "edf" and args.ttft_slo is None \
+            and args.e2e_slo is None:
+        ap.error("--policy edf orders by deadlines: pass --ttft-slo and/or "
+                 "--e2e-slo (steps from arrival); --priority alone only "
+                 "affects --policy priority")
 
     if args.mode == "pipeline" and not args.devices:
         args.devices = args.stages      # one fake XLA device per stage
@@ -138,7 +167,8 @@ def main():
         llm = LLM.from_backend(runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
             max_len=args.max_len, mesh=mesh, impl=args.impl, **kv_kw),
-            seed=args.seed, min_bucket=args.min_bucket, prefill_chunk=chunk)
+            seed=args.seed, min_bucket=args.min_bucket, prefill_chunk=chunk,
+            policy=args.policy)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -153,7 +183,7 @@ def main():
             objective="throughput", kind="pipeline", params=params,
             n_slots=args.slots or None, max_len=args.max_len, seed=args.seed,
             min_bucket=args.min_bucket, impl=args.impl, prefill_chunk=chunk,
-            **kv_kw)
+            policy=args.policy, **kv_kw)
         n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "
@@ -161,7 +191,9 @@ def main():
         print(f"planned stages (periods per stage): "
               f"{llm.backend.spec.periods_per_stage}")
 
-    sp = SamplingParams(max_tokens=args.gen)
+    sp = SamplingParams(max_tokens=args.gen,
+                        priority=args.priority or 0,
+                        ttft_slo=args.ttft_slo, e2e_slo=args.e2e_slo)
     t0 = time.time()
     if args.stream:
         outs = {}
@@ -184,6 +216,11 @@ def main():
         print(f"  prefix cache: {st.prefix_hits} hits "
               f"({st.prefix_hit_tokens} prompt tokens reused); "
               f"{st.prefill_chunks} prefill chunk passes")
+    if args.ttft_slo is not None or args.e2e_slo is not None:
+        met = sum(1 for o in outs if o.slo_met())
+        print(f"  SLO ({args.policy}): {met}/{len(outs)} met "
+              f"(ttft_misses={st.ttft_misses}, e2e_misses={st.e2e_misses}, "
+              f"slo_preemptions={st.slo_preemptions})")
     for o in outs[:4]:
         ttft = f"{o.timing.ttft_s:.2f}s" if o.timing.ttft_s else "-"
         print(f"  req {o.uid}: {o.finish_reason} after {o.n_generated} toks "

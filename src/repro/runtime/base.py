@@ -278,6 +278,9 @@ class BackendInfo:
     prefix_hits: int = 0               # admissions that adopted cached blocks
     prefix_hit_tokens: int = 0         # prompt tokens served from the cache
     prefix_blocks_cached: int = 0      # cached-free blocks held for reuse
+    #: advisory decode rate (tokens/s per busy slot-step) for dispatcher
+    #: cost estimates; 0.0 = unknown (the Fleet treats unknown as 1.0)
+    tokens_per_s: float = 0.0
 
     @property
     def paged(self) -> bool:

@@ -12,11 +12,19 @@ token through the stage chain, respecting serially-reusable device resources
 - ``schedule="bubbles"`` inserts the Fig. 5(a) iteration barrier inside the
   backend, so the two schedules are compared over identical scheduler code.
 
-Tokens are synthetic (a seeded counter stream — planner code cares about
-time, not text); timing comes from :class:`repro.core.simulator.StageCosts`.
+Tokens are synthetic but *deterministic in the token history*: each emitted
+token is a hash of the slot's unpadded prompt + everything generated so far
+(salted by ``seed``), so a request's token stream is a pure function of its
+prompt — identical across slot placement, admission order, preempt/resume
+(the resume prefix *is* prompt+generated), and across separate SimBackend
+instances built with the same seed.  That last property is what lets the
+multi-backend spillover tests assert token-for-token parity between a fleet
+run and a single-backend baseline.  Timing comes from
+:class:`repro.core.simulator.StageCosts`.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, List, Literal, Optional, Sequence
 
 import numpy as np
@@ -55,7 +63,9 @@ class SimBackend(InferenceBackend):
         self._fed = [0] * n_slots               # feeds consumed per slot
         self._seen = [0] * n_slots              # tokens emitted per slot
         self._plen = [0] * n_slots              # prompt tokens per slot
-        self._rng = np.random.default_rng(seed)
+        self._hist: List[List[int]] = [[] for _ in range(n_slots)]
+        # ^ unpadded prompt + generated tokens: the hash input for _emit
+        self._seed = seed
         self._vocab = vocab_size
         self.makespan = 0.0
         self.tokens_done = 0
@@ -76,6 +86,10 @@ class SimBackend(InferenceBackend):
         self._prefix_hits = 0
         self._prefix_hit_tokens = 0
         self._stream_tokens: Dict[int, np.ndarray] = {}
+        # advisory decode rate for dispatcher cost estimates: sequences per
+        # second through one full decode pass of the stage chain
+        step_t = float(np.sum(costs.decode) + np.sum(costs.comm_decode)
+                       + costs.return_comm)
         self._info = BackendInfo(
             n_slots=n_slots, max_len=max_len, samples_in_backend=True,
             cache_layout=cache_layout,
@@ -83,7 +97,8 @@ class SimBackend(InferenceBackend):
             total_blocks=self.pager.total_blocks if self.pager else 0,
             free_blocks=self.pager.total_blocks if self.pager else 0,
             max_ctx_blocks=self.pager.max_ctx_blocks if self.pager else 0,
-            prefix_caching=self._prefix_on, supports_extend=True)
+            prefix_caching=self._prefix_on, supports_extend=True,
+            tokens_per_s=mb_batch / max(step_t, 1e-12))
 
     @property
     def info(self) -> BackendInfo:
@@ -108,8 +123,10 @@ class SimBackend(InferenceBackend):
     def _emit(self, slot: int) -> SlotEvent:
         self._seen[slot] += 1
         self.tokens_done += self.mb_batch
-        return SlotEvent(slot=slot,
-                         token=int(self._rng.integers(0, self._vocab)))
+        hist = np.asarray(self._hist[slot], np.int32)
+        tok = (zlib.crc32(hist.tobytes()) ^ self._seed) % self._vocab
+        self._hist[slot].append(tok)
+        return SlotEvent(slot=slot, token=int(tok))
 
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
                 prompt_lens: Optional[Sequence[int]] = None,
@@ -123,11 +140,16 @@ class SimBackend(InferenceBackend):
             # slot's TRUE prompt length — pads hold no blocks
             self.pager.realloc_wave(slots, lens)
         out = []
-        for slot, plen in zip(slots, lens):
+        for i, (slot, plen) in enumerate(zip(slots, lens)):
             self._active[slot] = True
             self._fed[slot] = 0
             self._seen[slot] = 0
             self._plen[slot] = plen
+            # true tokens sit right-aligned in the padded row; the hash
+            # history starts from the unpadded prompt so pads (and slot /
+            # wave placement) can never change the stream
+            self._hist[slot] = \
+                prompts[i, prompts.shape[1] - plen:].astype(np.int32).tolist()
             self._ready[slot] = self.makespan if self.schedule == "bubbles" \
                 else self._ready[slot]
             self._run_through_stages(slot, prefill=True)
@@ -162,6 +184,8 @@ class SimBackend(InferenceBackend):
         self._fed[slot] = 0
         self._seen[slot] = 0
         self._plen[slot] = start                # grows as chunks land
+        self._hist[slot] = p.tolist()           # full prompt: chunk layout
+        #                                         never changes the stream
         return start
 
     def prefill_chunk(self, slots: Sequence[int], chunks: np.ndarray,

@@ -1,6 +1,9 @@
 from repro.serving.llm import LLM
 from repro.serving.scheduler import (ContinuousBatcher, IncompleteServeError,
                                      SchedulerStats)
+from repro.serving.sched import (EDFPolicy, FIFOPolicy, Fleet, PriorityPolicy,
+                                 SchedPolicy, bursty_trace, make_policy,
+                                 poisson_trace, replay)
 from repro.serving.types import (Request, RequestOutput, RequestTiming,
                                  SamplingParams, TokenEvent)
 
@@ -8,6 +11,8 @@ __all__ = [
     "LLM", "Request", "RequestOutput", "RequestTiming", "SamplingParams",
     "TokenEvent", "ContinuousBatcher", "SchedulerStats",
     "IncompleteServeError", "ServeEngine", "sample_logits",
+    "SchedPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
+    "make_policy", "Fleet", "poisson_trace", "bursty_trace", "replay",
 ]
 
 

@@ -63,10 +63,13 @@ class LLM:
     """Streaming serving facade over one :class:`InferenceBackend`."""
 
     def __init__(self, backend, *, seed: int = 0, min_bucket: int = 1,
-                 pad_id: int = 0, prefill_chunk: Optional[int] = None):
+                 pad_id: int = 0, prefill_chunk: Optional[int] = None,
+                 policy=None, max_preemptions: int = 3):
         self.batcher = ContinuousBatcher(backend, seed=seed,
                                          min_bucket=min_bucket, pad_id=pad_id,
-                                         prefill_chunk=prefill_chunk)
+                                         prefill_chunk=prefill_chunk,
+                                         policy=policy,
+                                         max_preemptions=max_preemptions)
         self.backend = self.batcher.backend
         self.deployment = None          # set by from_plan
 
@@ -89,6 +92,7 @@ class LLM:
                   num_blocks: Optional[int] = None,
                   prefix_cache: bool = False,
                   prefill_chunk: Optional[int] = None,
+                  policy=None, max_preemptions: int = 3,
                   ) -> "LLM":
         """Plan → backend → serving in one call (the paper's Fig. 3 flow).
 
@@ -109,6 +113,11 @@ class LLM:
         recomputed; ``prefill_chunk=N`` streams long prompts through
         prefill N tokens per scheduler quantum, interleaved with decode.
         Both are semantically invisible (greedy outputs are identical).
+
+        ``policy`` selects the admission/preemption policy (``"fifo"``
+        default, ``"priority"``, ``"edf"`` — see ``serving.sched``); like
+        the knobs above it never changes any request's tokens, only when
+        they are produced.
         """
         from repro.core.planner import plan_deployment
         from repro.core.profile import Workload
@@ -125,7 +134,8 @@ class LLM:
                                   num_blocks=num_blocks,
                                   prefix_cache=prefix_cache)
         llm = cls(backend, seed=seed, min_bucket=min_bucket, pad_id=pad_id,
-                  prefill_chunk=prefill_chunk)
+                  prefill_chunk=prefill_chunk, policy=policy,
+                  max_preemptions=max_preemptions)
         llm.deployment = dep
         return llm
 

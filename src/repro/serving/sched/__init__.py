@@ -1,0 +1,26 @@
+"""SLO-aware traffic scheduling: policies, the multi-backend Fleet, and
+reproducible arrival traces (see docs/runtime.md "Traffic scheduling")."""
+from repro.serving.sched.policy import (DEFAULT_PREEMPT_SLACK, EDFPolicy,
+                                        FIFOPolicy, POLICIES, PriorityPolicy,
+                                        SchedPolicy, make_policy)
+from repro.serving.sched.trace import (DEFAULT_CLASSES, ReplayReport,
+                                       TraceClass, TraceItem, bursty_trace,
+                                       poisson_trace, replay)
+
+__all__ = [
+    "SchedPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
+    "POLICIES", "make_policy", "DEFAULT_PREEMPT_SLACK",
+    "Fleet",
+    "TraceClass", "TraceItem", "DEFAULT_CLASSES", "ReplayReport",
+    "poisson_trace", "bursty_trace", "replay",
+]
+
+
+def __getattr__(name):
+    # Fleet sits on top of ContinuousBatcher, which itself imports the
+    # policy module above — loading it lazily keeps this package importable
+    # from inside the scheduler without a cycle
+    if name == "Fleet":
+        from repro.serving.sched.fleet import Fleet
+        return Fleet
+    raise AttributeError(name)

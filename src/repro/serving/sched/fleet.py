@@ -1,0 +1,304 @@
+"""Multi-backend dispatcher: N batchers over N backends, one queue surface.
+
+EdgeShard's deployment target is a *set* of heterogeneous executors (edge
+boxes, a cloud pipeline, spare accelerators), not one backend.  The
+:class:`Fleet` makes them serve as one system:
+
+- **routing** — each arriving request goes to the feasible backend with the
+  lowest *cost estimate*: requests in line (queue depth + running) divided
+  by the backend's advertised service rate (``BackendInfo.tokens_per_s`` ×
+  slots), plus a penalty when its paged pool cannot cover the prompt right
+  now.  Routing happens at *arrival* time (staged traces are held in the
+  fleet, not pre-routed), so the estimate sees the actual load.
+- **spillover migration** — each step, queued-but-never-started work is
+  withdrawn (``ContinuousBatcher.withdraw``) from saturated batchers (every
+  slot busy *and* a backlog) and resubmitted to idle ones (free slots, no
+  queue).  The SLO clock travels with the request (``submit(...,
+  arrival_step=)``), so migration never resets deadlines or hides queue
+  wait.  Running or preempted-mid-flight requests never migrate — their
+  generated tokens belong to their backend's KV state.
+- **one clock** — all batchers are driven in lockstep on the fleet's step
+  counter, so step-denominated SLOs mean the same thing on every backend.
+
+Token parity: per-request outputs are a pure function of the prompt on
+every backend kind (masked prefill + deterministic decode; ``SimBackend``
+hashes its token history), so a fleet run yields token-for-token the same
+per-request outputs as a single-backend run of the same kind — routing and
+migration change *when*, never *what*.  The spillover tests assert exactly
+this.
+
+Feasibility errors are actionable: a request no backend can serve (prompt
+too long everywhere, sampling on greedy-only backends, pool too small)
+raises with the per-backend reason instead of queueing forever.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.scheduler import (ContinuousBatcher, IncompleteServeError,
+                                     SchedulerStats)
+from repro.serving.types import Request, TokenEvent
+
+
+class Fleet:
+    """One serving surface over many backends (see module docstring).
+
+    ``backends`` are :class:`~repro.runtime.base.InferenceBackend` s (or
+    anything ``ContinuousBatcher`` accepts); every batcher gets the same
+    ``policy`` / ``seed`` / admission knobs, so the fleet behaves like one
+    policy-scheduled system that happens to have distributed capacity.
+    """
+
+    def __init__(self, backends: Sequence, *, policy=None, seed: int = 0,
+                 min_bucket: int = 1, pad_id: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 reserve_blocks: Optional[int] = None,
+                 max_preemptions: int = 3, migrate: bool = True,
+                 on_token=None):
+        if not backends:
+            raise ValueError("Fleet needs at least one backend")
+        self.batchers: List[ContinuousBatcher] = [
+            ContinuousBatcher(b, seed=seed, min_bucket=min_bucket,
+                              pad_id=pad_id, prefill_chunk=prefill_chunk,
+                              reserve_blocks=reserve_blocks, policy=policy,
+                              max_preemptions=max_preemptions,
+                              on_token=on_token)
+            for b in backends]
+        self.migrate = migrate
+        self.step_no = 0
+        self.done: Dict[int, Request] = {}
+        self.migrations = 0
+        self._arrivals: List[Tuple[int, int, Request]] = []  # (step, n, req)
+        self._n_submitted = 0
+        self._home: Dict[int, int] = {}          # uid -> batcher index
+        self._uids = set()
+
+    # ------------------------------------------------------------------ #
+    # routing
+    # ------------------------------------------------------------------ #
+    def _infeasible_reason(self, b: ContinuousBatcher, req: Request,
+                           ) -> Optional[str]:
+        """Why this backend can never serve ``req`` (None = it can)."""
+        info = b.backend.info
+        plen = int(np.asarray(req.prompt).shape[0])
+        total = plen + req.params.max_tokens - 1
+        if total > info.max_len:
+            return (f"prompt {plen} + max_tokens {req.params.max_tokens} "
+                    f"needs context {total} > max_len {info.max_len}")
+        if info.paged and info.blocks_for_len(min(total, info.max_len)) \
+                > info.total_blocks:
+            return (f"worst case spans "
+                    f"{info.blocks_for_len(min(total, info.max_len))} KV "
+                    f"blocks > pool of {info.total_blocks}")
+        if req.params.temperature > 0.0 and info.samples_in_backend:
+            return ("samples in-backend (greedy only); temperature/top_k "
+                    "needs a logits-producing backend")
+        return None
+
+    def _cost(self, b: ContinuousBatcher, req: Request) -> float:
+        """Estimated wait (arbitrary units, comparable across batchers):
+        requests in line over the backend's service rate, plus a flat
+        penalty when the paged pool cannot admit this prompt right now."""
+        info = b.backend.info
+        in_line = len(b.queue) + len(b._slot_req)
+        rate = (info.tokens_per_s or 1.0) * max(info.n_slots, 1)
+        cost = (in_line + 1) / rate
+        if info.paged:
+            need = info.blocks_for_len(len(req.prompt))
+            if need > info.free_blocks:
+                cost *= 4.0              # will queue on pool pressure
+        return cost
+
+    def _feasible(self, req: Request, backend: Optional[int]) -> List[int]:
+        """Backends that can serve ``req`` (just ``[backend]`` when
+        pinned), or an actionable ValueError naming each backend's
+        objection when none can."""
+        if backend is not None:
+            reason = self._infeasible_reason(self.batchers[backend], req)
+            if reason is not None:
+                raise ValueError(
+                    f"request {req.uid}: pinned to backend {backend}, "
+                    f"which cannot serve it: {reason}")
+            return [backend]
+        feasible, reasons = [], []
+        for i, b in enumerate(self.batchers):
+            reason = self._infeasible_reason(b, req)
+            if reason is None:
+                feasible.append(i)
+            else:
+                reasons.append(f"backend {i}: {reason}")
+        if not feasible:
+            raise ValueError(
+                f"request {req.uid}: no backend in the fleet can serve "
+                f"it — " + "; ".join(reasons) +
+                ". Re-provision a backend (larger max_len / --kv-blocks,"
+                " or a logits-producing kind for sampling) or relax the"
+                " request.")
+        return feasible
+
+    def _route(self, req: Request, backend: Optional[int],
+               arrival_step: Optional[int] = None) -> int:
+        feasible = self._feasible(req, backend)
+        pick = min(feasible,
+                   key=lambda i: (self._cost(self.batchers[i], req), i))
+        self._home[req.uid] = pick
+        self.batchers[pick].submit(req, arrival_step=arrival_step)
+        return pick
+
+    def submit(self, req: Request, at_step: int = 0, *,
+               backend: Optional[int] = None) -> int:
+        """Enqueue a request; route it when it *arrives* (``at_step``), by
+        live cost estimate.  ``backend=i`` pins it (still checked feasible).
+        Returns the uid."""
+        if req.uid in self._uids:
+            raise ValueError(f"duplicate request uid {req.uid} in fleet")
+        self._feasible(req, backend)     # fail fast, even when staged
+        self._uids.add(req.uid)
+        self._n_submitted += 1
+        if at_step > self.step_no:
+            req.timing.arrival_step = at_step     # routing waits for arrival
+            heapq.heappush(self._arrivals,
+                           (at_step, -1 if backend is None else backend,
+                            self._n_submitted, req))
+        else:
+            self._sync_clocks()
+            self._route(req, backend)
+        return req.uid
+
+    # ------------------------------------------------------------------ #
+    # spillover migration
+    # ------------------------------------------------------------------ #
+    def _migrate_once(self) -> bool:
+        """Move one queued-never-started request from a saturated batcher
+        (no free slot, non-empty queue) to an idle one (free slots, empty
+        queue).  Returns True if something moved."""
+        idle = [j for j, b in enumerate(self.batchers)
+                if b._free and not b.queue]
+        if not idle:
+            return False
+        for i, src in enumerate(self.batchers):
+            if not src.queue or src._free:
+                continue
+            # take from the tail: the policy-last request loses the least
+            # by leaving this queue, and the head keeps its position
+            for r in list(src.queue)[::-1]:
+                tgt = next((j for j in idle if self._infeasible_reason(
+                    self.batchers[j], r) is None), None)
+                if tgt is None:
+                    continue
+                arrival = r.timing.arrival_step
+                req = src.withdraw(r.uid)
+                if req is None:          # resume-pending: not movable
+                    continue
+                self.batchers[tgt].submit(req, arrival_step=arrival)
+                self._home[req.uid] = tgt
+                self.migrations += 1
+                return True
+        return False
+
+    # ------------------------------------------------------------------ #
+    # stepping
+    # ------------------------------------------------------------------ #
+    def _sync_clocks(self) -> None:
+        # lockstep: every batcher's step counter IS the fleet counter (an
+        # idle batcher does not advance itself, so push, never pull)
+        for b in self.batchers:
+            b.step_no = self.step_no
+
+    def step(self) -> List[TokenEvent]:
+        """Advance every batcher one quantum on the shared clock; release
+        due staged arrivals (routing them by live cost), migrate spillover,
+        collect finishes fleet-wide."""
+        self._sync_clocks()
+        while self._arrivals and self._arrivals[0][0] <= self.step_no:
+            _, backend, _, req = heapq.heappop(self._arrivals)
+            self._route(req, None if backend < 0 else backend,
+                        arrival_step=req.timing.arrival_step)
+        if self.migrate:
+            while self._migrate_once():
+                pass
+        out: List[TokenEvent] = []
+        for b in self.batchers:
+            out.extend(b.step())
+            if b.done:
+                for uid in list(b.done):
+                    self.done[uid] = b.release(uid)
+        self.step_no += 1
+        return out
+
+    # ------------------------------------------------------------------ #
+    # results / introspection (the batcher surface, fleet-wide)
+    # ------------------------------------------------------------------ #
+    @property
+    def has_work(self) -> bool:
+        return bool(self._arrivals) or \
+            any(b.has_work for b in self.batchers)
+
+    @property
+    def running(self) -> List[int]:
+        return [u for b in self.batchers for u in b.running]
+
+    @property
+    def pending(self) -> List[int]:
+        return [u for b in self.batchers for u in b.pending] + \
+            [r.uid for _, _, _, r in self._arrivals]
+
+    def poll(self, uid: int) -> Optional[Request]:
+        return self.done.get(uid)
+
+    def release(self, uid: int) -> Optional[Request]:
+        req = self.done.pop(uid, None)
+        if req is not None:
+            self._uids.discard(uid)
+            self._home.pop(uid, None)
+        return req
+
+    def where(self, uid: int) -> Optional[int]:
+        """Which backend a request was last routed to (None: still staged
+        or unknown)."""
+        return self._home.get(uid)
+
+    @property
+    def stats(self) -> SchedulerStats:
+        """Fleet-wide aggregate: counters summed across batchers (so
+        utilization weighs each backend by its slot count)."""
+        agg = SchedulerStats()
+        for b in self.batchers:
+            s = b.stats
+            agg.served += s.served
+            agg.decode_steps += s.decode_steps
+            agg.prefills += s.prefills
+            agg.slot_busy_steps += s.slot_busy_steps
+            agg.slot_total_steps += s.slot_total_steps
+            agg.preemptions += s.preemptions
+            agg.slo_preemptions += s.slo_preemptions
+            agg.resumes += s.resumes
+            agg.starvation_avoided += s.starvation_avoided
+            agg.queued += s.queued
+            agg.queue_wait_steps += s.queue_wait_steps
+            agg.ttft_misses += s.ttft_misses
+            agg.e2e_misses += s.e2e_misses
+            agg.prefix_hits += s.prefix_hits
+            agg.prefix_hit_tokens += s.prefix_hit_tokens
+            agg.prefill_chunks += s.prefill_chunks
+            agg.exhausted |= s.exhausted
+        return agg
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, Request]:
+        """Serve until every queue drains; returns finished requests by
+        uid.  Raises :class:`IncompleteServeError` (partial ``done``
+        attached) when ``max_steps`` is exhausted first."""
+        steps = 0
+        while self.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        if self.has_work:
+            raise IncompleteServeError(
+                f"Fleet.run(max_steps={max_steps}) exhausted with "
+                f"{len(self.running)} running and {len(self.pending)} "
+                f"pending requests ({len(self.done)} finished; partial "
+                f"results on .done)", done=self.done)
+        return self.done

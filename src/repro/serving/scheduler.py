@@ -33,6 +33,21 @@ its prompt alone, identical across bucket sizes (``min_bucket`` is purely
 a compile-shape/throughput knob, default 1) and identical to an unpadded
 exact-length run.  Capacity checks accordingly use the *true* prompt
 length, not the padded bucket.
+
+Admission order is a pluggable *policy* (``serving.sched.policy``): the
+queue is kept sorted by the policy's key, so ``"fifo"`` (arrival order,
+the default), ``"priority"`` (service classes), and ``"edf"``
+(earliest pending deadline) all flow through the same bucketed-wave
+machinery.  Preemption victims are policy-chosen too (lowest priority /
+latest deadline / youngest), capped per request: a request evicted
+``max_preemptions`` times is *pinned* — the victim search skips it so
+steady overcommit rotates the pain instead of starving one request
+(``stats.starvation_avoided`` counts the overrides).  Preemptive policies
+additionally evict a victim for a *blocked* urgent request (no free slot
+or no block budget — utilization and pool pressure are the trigger), which
+is how a tight-deadline arrival cuts past saturated long-running work.
+Policies reorder scheduling only: per-request outputs are bit-identical
+across policies.
 """
 from __future__ import annotations
 
@@ -45,6 +60,7 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.runtime.base import InferenceBackend, PoolExhausted, SlotEvent
+from repro.serving.sched.policy import SchedPolicy, make_policy
 from repro.serving.types import Request, TokenEvent
 
 
@@ -56,8 +72,18 @@ class SchedulerStats:
     slot_busy_steps: int = 0
     slot_total_steps: int = 0
     exhausted: bool = False             # run() hit max_steps with work left
-    preemptions: int = 0                # pool-exhaustion evictions (paged)
+    preemptions: int = 0                # evictions (pool pressure + SLO)
+    slo_preemptions: int = 0            # of which: policy evicted a victim
+    #                                     to admit a blocked urgent request
     resumes: int = 0                    # preempted requests re-admitted
+    starvation_avoided: int = 0         # victim choices overridden because
+    #                                     the preferred victim was pinned
+    #                                     (>= max_preemptions evictions)
+    queued: int = 0                     # queue depth after the last step
+    queue_wait_steps: int = 0           # cumulative steps requests spent
+    #                                     queued before (re-)admission
+    ttft_misses: int = 0                # first tokens past their ttft_slo
+    e2e_misses: int = 0                 # finishes past their e2e_slo
     prefix_hits: int = 0                # admissions that adopted cached blocks
     prefix_hit_tokens: int = 0          # prompt tokens skipped via adoption
     prefill_chunks: int = 0             # per-slot chunk passes (streamed)
@@ -74,6 +100,22 @@ class SchedulerStats:
                 f"prefills={self.prefills}, "
                 f"preemptions={self.preemptions}, "
                 f"utilization={self.utilization:.3f})")
+
+    def __str__(self):
+        s = (f"SchedulerStats(served={self.served}, "
+             f"decode_steps={self.decode_steps}, "
+             f"prefills={self.prefills}, "
+             f"utilization={self.utilization:.3f}, "
+             f"queued={self.queued}, "
+             f"queue_wait_steps={self.queue_wait_steps}, "
+             f"preemptions={self.preemptions}")
+        if self.slo_preemptions or self.starvation_avoided:
+            s += (f", slo_preemptions={self.slo_preemptions}, "
+                  f"starvation_avoided={self.starvation_avoided}")
+        if self.ttft_misses or self.e2e_misses:
+            s += (f", ttft_misses={self.ttft_misses}, "
+                  f"e2e_misses={self.e2e_misses}")
+        return s + ")"
 
 
 class IncompleteServeError(RuntimeError):
@@ -120,11 +162,22 @@ class ContinuousBatcher:
                  pad_id: int = 0,
                  on_token: Optional[Callable[[TokenEvent], None]] = None,
                  reserve_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 policy=None, max_preemptions: int = 3):
         self.backend: InferenceBackend = _as_backend(backend)
         self.min_bucket = min_bucket
         self.pad_id = pad_id
         self.on_token = on_token
+        #: admission/victim policy: "fifo" (default), "priority", "edf",
+        #: or a SchedPolicy instance (see serving/sched/policy.py)
+        self.policy: SchedPolicy = make_policy(policy)
+        #: anti-starvation pin: a request evicted this many times is
+        #: skipped by the victim search (stats.starvation_avoided) so
+        #: steady overcommit cannot thrash one victim forever
+        if max_preemptions < 1:
+            raise ValueError(
+                f"max_preemptions must be >= 1, got {max_preemptions}")
+        self.max_preemptions = max_preemptions
         #: chunked prefill: cap each streamed-admission prefill pass at this
         #: many prompt tokens per scheduler quantum (None = whole suffix in
         #: one pass).  Takes effect on backends advertising
@@ -154,6 +207,14 @@ class ContinuousBatcher:
         self._resume: Dict[int, np.ndarray] = {}   # uid -> unpadded prefix
         self._admit_seq: Dict[int, int] = {}       # uid -> admission order
         self._n_admitted = 0
+        # policy scheduling state: per-uid submission order (the FIFO
+        # tiebreak), cached admit keys (static per enqueue), enqueue step
+        # (queue-wait accounting), and a dirty flag so the queue is only
+        # re-sorted when it changed
+        self._sub_seq: Dict[int, int] = {}
+        self._akey: Dict[int, Tuple] = {}
+        self._enq_step: Dict[int, int] = {}
+        self._queue_dirty = False
         # streamed admission (prefix cache / chunked prefill):
         # slot -> {"tokens": unpadded prefix, "fed": tokens prefilled so far}
         self._chunking: Dict[int, Dict] = {}
@@ -165,11 +226,17 @@ class ContinuousBatcher:
         b = max(self.min_bucket, 1 << max(n - 1, 0).bit_length())
         return min(b, self.backend.info.max_len)
 
-    def submit(self, req: Request, at_step: int = 0) -> int:
+    def submit(self, req: Request, at_step: int = 0, *,
+               arrival_step: Optional[int] = None) -> int:
         """Enqueue a request (optionally staged to arrive at a later step).
 
         Returns the request's uid.  Rejects duplicate uids — they would
         silently overwrite each other in ``done`` and share a PRNG stream.
+
+        ``arrival_step`` overrides the SLO clock origin (normally the
+        arrival itself): a dispatcher migrating a withdrawn request passes
+        the original arrival so deadlines and latency accounting do not
+        restart at the hand-off.
         """
         if req.uid in self._uids:
             raise ValueError(
@@ -221,14 +288,39 @@ class ContinuousBatcher:
                 f"backend (e.g. TensorBackend)")
         self._uids.add(req.uid)
         self._n_submitted += 1
+        self._sub_seq[req.uid] = self._n_submitted
         req.timing.submitted_s = time.perf_counter()
         req.timing.submit_step = self.step_no
+        req.timing.arrival_step = arrival_step if arrival_step is not None \
+            else max(at_step, self.step_no)
         if at_step <= self.step_no:
-            self.queue.append(req)
+            self._enqueue(req)
         else:
             heapq.heappush(self._arrivals,
                            (at_step, self._n_submitted, req))
         return req.uid
+
+    def _enqueue(self, req: Request, front: bool = False) -> None:
+        """Put ``req`` in the queue (front = preemption re-queue), caching
+        its policy admit key and starting its queue-wait clock."""
+        self._akey[req.uid] = self.policy.admit_key(
+            req, self._sub_seq[req.uid])
+        self._enq_step[req.uid] = self.step_no
+        if front:
+            self.queue.appendleft(req)
+        else:
+            self.queue.append(req)
+        self._queue_dirty = True
+
+    def _sort_queue(self) -> None:
+        """Keep the queue in policy order.  FIFO's deque order already is
+        the policy order (appendleft re-queues preserve resume-first), so
+        only reordering policies pay the sort — and only when the queue
+        changed since the last one (keys are static per enqueue)."""
+        if self._queue_dirty and self.policy.reorders:
+            self.queue = deque(
+                sorted(self.queue, key=lambda r: self._akey[r.uid]))
+        self._queue_dirty = False
 
     # ------------------------------------------------------------------ #
     # sampling
@@ -283,7 +375,39 @@ class ContinuousBatcher:
         req = self.done.pop(uid, None)
         if req is not None:
             self._uids.discard(uid)
+            self._sub_seq.pop(uid, None)
         return req
+
+    def withdraw(self, uid: int) -> Optional[Request]:
+        """Remove a *queued, never-started* request and return it, freeing
+        its uid — the primitive multi-backend spillover is built on: a
+        dispatcher withdraws work a saturated batcher has not begun and
+        re-submits it to an idle one.  Running, finished, or
+        preempted-mid-flight requests (whose generated tokens belong to
+        this backend) are not withdrawable; returns None for those."""
+        if uid in self._resume or uid in set(self.running) or uid in self.done:
+            return None
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                break
+        else:
+            for j, (_, _, r) in enumerate(self._arrivals):
+                if r.uid == uid:
+                    del self._arrivals[j]
+                    heapq.heapify(self._arrivals)
+                    break
+            else:
+                return None
+        self._uids.discard(uid)
+        self._sub_seq.pop(uid, None)
+        self._akey.pop(uid, None)
+        # wait spent here still counts: attribute it before handing off
+        waited = self.step_no - self._enq_step.pop(uid, self.step_no)
+        r.timing.queued_steps += waited
+        self.stats.queue_wait_steps += waited
+        self._queue_dirty = True
+        return r
 
     def _next_wave(self, cap: Optional[int] = None,
                    ) -> Tuple[int, List[Request]]:
@@ -324,18 +448,65 @@ class ContinuousBatcher:
         self._resume[req.uid] = np.concatenate(
             [np.asarray(req.prompt, np.int32),
              np.asarray(req.generated, np.int32)])
-        self.queue.appendleft(req)
         req.timing.preemptions += 1
+        self._enqueue(req, front=True)  # re-keyed: pending deadlines changed
         self.stats.preemptions += 1
 
-    def _preempt_youngest(self) -> bool:
-        """Preempt the most recently admitted running request.  Returns
-        False when preemption cannot help (zero or one request running)."""
+    def _pick_victim(self) -> Optional[int]:
+        """The slot the policy prefers to evict (lowest priority / latest
+        deadline / youngest), honoring anti-starvation pins: a request
+        already evicted ``max_preemptions`` times is skipped — unless every
+        candidate is pinned, in which case the least-evicted one is taken
+        (liveness beats fairness).  Counts ``starvation_avoided`` whenever
+        the pin changed the outcome."""
+        if not self._slot_req:
+            return None
+        key = lambda s: self.policy.victim_key(
+            self._slot_req[s], self._admit_seq[self._slot_req[s].uid])
+        raw = max(self._slot_req, key=key)
+        unpinned = [s for s in self._slot_req
+                    if self._slot_req[s].timing.preemptions
+                    < self.max_preemptions]
+        if unpinned:
+            pick = max(unpinned, key=key)
+        else:
+            pick = min(self._slot_req,
+                       key=lambda s: self._slot_req[s].timing.preemptions)
+        if pick != raw:
+            self.stats.starvation_avoided += 1
+        return pick
+
+    def _preempt_victim(self) -> bool:
+        """Preempt the policy-chosen victim.  Returns False when preemption
+        cannot help (zero or one request running)."""
         if len(self._slot_req) <= 1:
             return False
-        slot = max(self._slot_req,
-                   key=lambda s: self._admit_seq[self._slot_req[s].uid])
+        self._preempt(self._pick_victim())
+        return True
+
+    def _slo_preempt(self) -> bool:
+        """Evict one victim for the queue head when the policy says its
+        urgency beats the victim's and the head is *blocked on capacity*:
+        every slot busy, or the paged block budget cannot cover its
+        admission.  This is the SLO-aware counterpart of pool-exhaustion
+        preemption — it fires on queue pressure instead of allocation
+        failure.  At most one eviction per step (the pins in
+        :meth:`_pick_victim` bound per-request churn)."""
+        head = self.queue[0]
+        plen = len(self._resume.get(head.uid, head.prompt))
+        if self._free:
+            budget = self._admit_block_budget()
+            if budget is None or \
+                    self.backend.info.blocks_for_len(plen) <= budget:
+                return False            # not blocked: admission will take it
+        if not self._slot_req:
+            return False
+        slot = self._pick_victim()
+        victim = self._slot_req[slot]
+        if not self.policy.should_preempt(head, victim, self.step_no):
+            return False
         self._preempt(slot)
+        self.stats.slo_preemptions += 1
         return True
 
     def _admit_block_budget(self) -> Optional[int]:
@@ -349,6 +520,20 @@ class ContinuousBatcher:
             else len(self._slot_req)
         return max(info.free_blocks - reserve, 0)
 
+    def _mark_admitted(self, req: Request, now: Optional[float] = None,
+                       ) -> None:
+        """Admission bookkeeping shared by every admission path: timing,
+        admission order (victim tiebreak), and queue-wait attribution."""
+        req.timing.admit_step = self.step_no
+        req.timing.admitted_s = now if now is not None else \
+            time.perf_counter()
+        self._n_admitted += 1
+        self._admit_seq[req.uid] = self._n_admitted
+        waited = self.step_no - self._enq_step.pop(req.uid, self.step_no)
+        self._akey.pop(req.uid, None)
+        req.timing.queued_steps += waited
+        self.stats.queue_wait_steps += waited
+
     def _handle(self, events: List[SlotEvent], out: List[TokenEvent]):
         for ev in events:
             req = self._slot_req.get(ev.slot)
@@ -359,6 +544,9 @@ class ContinuousBatcher:
             if not req.generated:
                 req.timing.first_token_s = now
                 req.timing.first_token_step = self.step_no
+                slo = req.params.ttft_slo
+                if slo is not None and req.timing.ttft_steps > slo:
+                    self.stats.ttft_misses += 1
             req.generated.append(tok)
             reason = req.check_finish()
             # finish bookkeeping happens BEFORE the event surfaces, so a
@@ -369,10 +557,14 @@ class ContinuousBatcher:
                 req.finish_reason = reason
                 req.timing.finished_s = now
                 req.timing.finish_step = self.step_no
+                slo = req.params.e2e_slo
+                if slo is not None and req.timing.e2e_steps > slo:
+                    self.stats.e2e_misses += 1
                 self.done[req.uid] = req
                 self.stats.served += 1
                 self._keys.pop(req.uid, None)
                 self._admit_seq.pop(req.uid, None)
+                self._sub_seq.pop(req.uid, None)
                 self.backend.free_slot(ev.slot)
                 del self._slot_req[ev.slot]
                 self._feeds.pop(ev.slot, None)
@@ -423,7 +615,7 @@ class ContinuousBatcher:
                 # nothing mutated (the backend checks the whole wave before
                 # touching the pool): preempt a victim and retry the same
                 # chunks next quantum
-                if not self._preempt_youngest():
+                if not self._preempt_victim():
                     raise
                 return
             for slot, n, done in zip(slots, lens, last):
@@ -451,9 +643,18 @@ class ContinuousBatcher:
         """
         out: List[TokenEvent] = []
         while self._arrivals and self._arrivals[0][0] <= self.step_no:
-            self.queue.append(heapq.heappop(self._arrivals)[2])
+            self._enqueue(heapq.heappop(self._arrivals)[2])
         if not (self.queue or self._slot_req or self._arrivals):
+            self.stats.queued = 0
             return out
+        # policy order first: the rest of admission just pulls queue[0]
+        self._sort_queue()
+        # SLO preemption: a preemptive policy may evict one victim per step
+        # for a *blocked* urgent head — blocked (no free slot / no block
+        # budget for it) is the saturation signal; an idle system admits
+        # normally
+        if self.queue and self.policy.preemptive and self._slo_preempt():
+            self._sort_queue()          # the victim re-queued at the front
         # admission: fill free slots without draining the running batch;
         # one prefill call per length bucket keeps XLA shapes bounded
         info = self.backend.info
@@ -484,10 +685,7 @@ class ContinuousBatcher:
                     del self._resume[req.uid]
                     self.stats.resumes += 1
                 self._slot_req[slot] = req
-                req.timing.admit_step = self.step_no
-                req.timing.admitted_s = time.perf_counter()
-                self._n_admitted += 1
-                self._admit_seq[req.uid] = self._n_admitted
+                self._mark_admitted(req)
                 self._chunking[slot] = {"tokens": tokens, "fed": start}
                 self.stats.prefills += 1
                 if start:
@@ -546,16 +744,14 @@ class ContinuousBatcher:
                     self._free.appendleft(s)
                 for r in reversed(wave):
                     self.queue.appendleft(r)
+                self._queue_dirty = True
                 break
             if resumed:
                 del self._resume[wave[0].uid]
             now = time.perf_counter()
             for slot, req in zip(slots, wave):
                 self._slot_req[slot] = req
-                req.timing.admit_step = self.step_no
-                req.timing.admitted_s = now
-                self._n_admitted += 1
-                self._admit_seq[req.uid] = self._n_admitted
+                self._mark_admitted(req, now)
             self.stats.prefills += 1
             if resumed:
                 self.stats.resumes += 1
@@ -575,10 +771,11 @@ class ContinuousBatcher:
                     events = self.backend.decode_step(self._feeds)
                     break
                 except PoolExhausted:
-                    if not self._preempt_youngest():
+                    if not self._preempt_victim():
                         raise   # a lone request outgrowing the pool is a
                                 # sizing bug submit() should have rejected
             self._handle(events, out)
+        self.stats.queued = len(self.queue)
         self.step_no += 1
         return out
 

@@ -1,0 +1,394 @@
+"""SLO-aware scheduling: policies, deadline accounting, anti-starvation,
+queue observability, and multi-backend (Fleet) spillover.
+
+Sim-backed throughout except the tensor+sim fleet test at the bottom: the
+scheduler step is the clock, so every assertion here is exact, not
+statistical.
+"""
+import numpy as np
+import pytest
+
+from repro.core.simulator import StageCosts
+from repro.runtime.sim import SimBackend
+from repro.serving import (ContinuousBatcher, Fleet, Request, SamplingParams)
+from repro.serving.sched import (EDFPolicy, FIFOPolicy, PriorityPolicy,
+                                 bursty_trace, make_policy, poisson_trace,
+                                 replay)
+
+
+def costs(n_stages=1):
+    return StageCosts(prefill=np.full(n_stages, 1e-3),
+                      decode=np.full(n_stages, 1e-3),
+                      comm_prefill=np.zeros(max(n_stages - 1, 0)),
+                      comm_decode=np.zeros(max(n_stages - 1, 0)),
+                      return_comm=0.0)
+
+
+def sim(n_slots=2, seed=0, **kw):
+    return SimBackend(costs(), n_slots=n_slots, seed=seed, max_len=256, **kw)
+
+
+def req(plen=8, uid=None, gen=8, base=1, **params):
+    return Request(prompt=np.arange(base, base + plen, dtype=np.int32),
+                   params=SamplingParams(max_tokens=gen, **params), uid=uid)
+
+
+# --------------------------------------------------------------------------- #
+# policy plumbing
+# --------------------------------------------------------------------------- #
+
+def test_make_policy():
+    assert isinstance(make_policy(None), FIFOPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    assert isinstance(make_policy("edf"), EDFPolicy)
+    inst = EDFPolicy(slack=3)
+    assert make_policy(inst) is inst
+    with pytest.raises(ValueError, match="edf"):
+        make_policy("sjf")
+
+
+def test_bad_knobs():
+    with pytest.raises(ValueError, match="max_preemptions"):
+        ContinuousBatcher(sim(), max_preemptions=0)
+
+
+# --------------------------------------------------------------------------- #
+# admission ordering
+# --------------------------------------------------------------------------- #
+
+def finish_order(batcher, reqs):
+    for r in reqs:
+        batcher.submit(r)
+    done = batcher.run()
+    return sorted(done, key=lambda u: done[u].timing.finish_step)
+
+
+def test_edf_orders_identical_arrivals():
+    """Same arrival step, one slot: admission must follow deadlines, not
+    submission order."""
+    reqs = [req(uid=1, base=1, e2e_slo=300),
+            req(uid=2, base=2, e2e_slo=30),
+            req(uid=3, base=3, e2e_slo=100)]
+    assert finish_order(ContinuousBatcher(sim(n_slots=1), policy="edf"),
+                        reqs) == [2, 3, 1]
+    # FIFO control: submission order wins
+    reqs = [req(uid=1, base=1, e2e_slo=300),
+            req(uid=2, base=2, e2e_slo=30),
+            req(uid=3, base=3, e2e_slo=100)]
+    assert finish_order(ContinuousBatcher(sim(n_slots=1), policy="fifo"),
+                        reqs) == [1, 2, 3]
+
+
+def test_edf_deadline_free_yields():
+    """A request with no SLO sorts after every deadline under EDF."""
+    reqs = [req(uid=1, base=1), req(uid=2, base=2, e2e_slo=500)]
+    assert finish_order(ContinuousBatcher(sim(n_slots=1), policy="edf"),
+                        reqs) == [2, 1]
+
+
+def test_priority_orders_admission():
+    reqs = [req(uid=1, base=1, priority=0), req(uid=2, base=2, priority=5),
+            req(uid=3, base=3, priority=2)]
+    assert finish_order(ContinuousBatcher(sim(n_slots=1), policy="priority"),
+                        reqs) == [2, 3, 1]
+
+
+def test_priority_inversion_preempted():
+    """Saturated low-priority work cannot hold out a high-priority arrival:
+    the policy evicts a victim (slo_preemptions) and the high-priority
+    request's first token beats every low-priority finish."""
+    cb = ContinuousBatcher(sim(n_slots=2), policy="priority")
+    cb.submit(req(uid=1, base=1, gen=60, priority=0))
+    cb.submit(req(uid=2, base=2, gen=60, priority=0))
+    cb.submit(req(uid=3, base=3, gen=4, priority=5), at_step=5)
+    done = cb.run()
+    assert cb.stats.slo_preemptions >= 1
+    hi = done[3].timing
+    assert hi.first_token_step < min(done[1].timing.finish_step,
+                                     done[2].timing.finish_step)
+    assert hi.ttft_steps <= 8        # admitted ~immediately on arrival
+    # the evicted victim still finishes with its full stream
+    assert all(len(done[u].generated) == 60 for u in (1, 2))
+
+
+def test_policies_are_semantically_neutral():
+    """Every policy produces bit-identical per-request tokens — they only
+    move *when* requests run."""
+    trace = bursty_trace(60, seed=11, mean_iat=0.7)
+    outs = {}
+    for pol in ("fifo", "priority", "edf"):
+        cb = ContinuousBatcher(sim(n_slots=2, cache_layout="paged",
+                                   num_blocks=12), policy=pol)
+        for i, it in enumerate(trace):
+            cb.submit(Request(prompt=it.prompt, params=it.params, uid=i),
+                      at_step=it.at_step)
+        done = cb.run()
+        outs[pol] = {u: list(r.generated) for u, r in done.items()}
+    assert outs["fifo"] == outs["priority"] == outs["edf"]
+
+
+# --------------------------------------------------------------------------- #
+# deadline accounting
+# --------------------------------------------------------------------------- #
+
+def test_deadline_miss_accounting():
+    """One slot, two 10-token requests, e2e_slo=16: the first meets it, the
+    queued one cannot — exactly one miss, on the right request."""
+    cb = ContinuousBatcher(sim(n_slots=1))
+    cb.submit(req(uid=1, base=1, gen=10, e2e_slo=16))
+    cb.submit(req(uid=2, base=2, gen=10, e2e_slo=16))
+    done = cb.run()
+    assert done[1].slo_met() is True
+    assert done[2].slo_met() is False
+    assert cb.stats.e2e_misses == 1
+    assert cb.stats.ttft_misses == 0
+    # no-SLO requests have no verdict
+    cb2 = ContinuousBatcher(sim(n_slots=1))
+    cb2.submit(req(uid=1))
+    assert cb2.run()[1].slo_met() is None
+
+
+def test_ttft_miss_accounting():
+    cb = ContinuousBatcher(sim(n_slots=1))
+    cb.submit(req(uid=1, base=1, gen=6, ttft_slo=4))
+    cb.submit(req(uid=2, base=2, gen=6, ttft_slo=4))   # waits ~6 steps
+    done = cb.run()
+    assert cb.stats.ttft_misses == 1
+    assert done[1].slo_met() is True and done[2].slo_met() is False
+
+
+def test_slo_clock_counts_from_arrival_not_staging():
+    """A request staged far in advance measures service latency from its
+    arrival step, not from submit()."""
+    cb = ContinuousBatcher(sim(n_slots=1))
+    cb.submit(req(uid=1, gen=4, e2e_slo=10), at_step=50)
+    done = cb.run()
+    t = done[1].timing
+    assert t.arrival_step == 50
+    assert t.e2e_steps <= 10 and done[1].slo_met() is True
+
+
+# --------------------------------------------------------------------------- #
+# anti-starvation + queue observability
+# --------------------------------------------------------------------------- #
+
+def overcommitted(policy="fifo", max_preemptions=3):
+    # short prompts + long generation over a tight pool: requests outgrow
+    # their blocks repeatedly, so exhaustion preemption fires more than once
+    # while everyone is still running — the thrash regime the pin targets
+    be = sim(n_slots=3, cache_layout="paged", num_blocks=7)
+    cb = ContinuousBatcher(be, policy=policy,
+                           max_preemptions=max_preemptions, reserve_blocks=0)
+    for u in range(1, 4):
+        cb.submit(req(plen=4, uid=u, base=u, gen=80))
+    return cb
+
+
+def test_starvation_pin_rotates_victims():
+    """Steady overcommit with max_preemptions=1: once the preferred victim
+    is pinned, the search overrides to another (starvation_avoided) and
+    every request still completes its full stream."""
+    cb = overcommitted(max_preemptions=1)
+    done = cb.run()
+    assert cb.stats.preemptions >= 3
+    assert cb.stats.starvation_avoided >= 1
+    assert all(len(done[u].generated) == 80 for u in (1, 2, 3))
+    # the pin rotated the pain: nobody ate every eviction
+    per = [done[u].timing.preemptions for u in (1, 2, 3)]
+    assert max(per) < cb.stats.preemptions
+
+
+def test_unpinned_victim_thrashes_without_cap():
+    """Control: with a huge cap the same workload concentrates evictions on
+    the youngest victim (the pre-fix behavior the pin exists to stop)."""
+    cb = overcommitted(max_preemptions=100)
+    done = cb.run()
+    assert cb.stats.starvation_avoided == 0
+    assert max(done[u].timing.preemptions for u in (1, 2, 3)) >= 2
+
+
+def test_overcommit_outputs_unchanged_by_pinning():
+    a = overcommitted(max_preemptions=1)
+    b = overcommitted(max_preemptions=100)
+    assert {u: list(r.generated) for u, r in a.run().items()} == \
+        {u: list(r.generated) for u, r in b.run().items()}
+
+
+def test_queue_observability():
+    cb = ContinuousBatcher(sim(n_slots=1))
+    cb.submit(req(uid=1, base=1, gen=5))
+    cb.submit(req(uid=2, base=2, gen=5))
+    cb.step()
+    assert cb.stats.queued == 1          # uid 2 still waiting
+    done = cb.run()
+    assert cb.stats.queued == 0
+    assert done[1].timing.queued_steps == 0
+    assert done[2].timing.queued_steps > 0
+    assert cb.stats.queue_wait_steps == sum(
+        r.timing.queued_steps for r in done.values())
+    s = str(cb.stats)
+    assert "queued=" in s and "queue_wait_steps=" in s
+
+
+# --------------------------------------------------------------------------- #
+# withdraw (the migration primitive)
+# --------------------------------------------------------------------------- #
+
+def test_withdraw_queued_only():
+    cb = ContinuousBatcher(sim(n_slots=1))
+    cb.submit(req(uid=1, base=1, gen=4))
+    cb.submit(req(uid=2, base=2, gen=4))
+    cb.submit(req(uid=3, base=3, gen=4), at_step=100)
+    cb.step()
+    assert cb.withdraw(1) is None        # running
+    w = cb.withdraw(2)                   # queued -> withdrawable
+    assert w is not None and w.uid == 2
+    assert cb.withdraw(2) is None        # gone
+    w3 = cb.withdraw(3)                  # staged -> withdrawable
+    assert w3 is not None and w3.uid == 3
+    done = cb.run()
+    assert sorted(done) == [1]
+    # a withdrawn uid is free again
+    cb.submit(req(uid=2, base=9, gen=2))
+    assert sorted(cb.run()) == [1, 2]
+
+
+# --------------------------------------------------------------------------- #
+# fleet: routing, spillover, parity
+# --------------------------------------------------------------------------- #
+
+def test_fleet_spillover_drains_and_matches_single():
+    """Everything pinned to backend 0; migration drains its queue onto the
+    idle backend 1, and every request's tokens match the single-backend
+    run bit for bit."""
+    trace = bursty_trace(80, seed=4, mean_iat=0.5)
+
+    def submit_all(server, **kw):
+        for i, it in enumerate(trace):
+            server.submit(Request(prompt=it.prompt, params=it.params, uid=i),
+                          at_step=it.at_step, **kw)
+        return server.run(max_steps=100_000)
+
+    single = ContinuousBatcher(sim(n_slots=2, seed=0), policy="edf")
+    s_done = submit_all(single)
+    fleet = Fleet([sim(n_slots=2, seed=0), sim(n_slots=2, seed=0)],
+                  policy="edf")
+    f_done = submit_all(fleet, backend=0)
+    assert fleet.migrations > 0
+    assert {j for u in f_done if (j := fleet.where(u)) is not None} == {0, 1}
+    assert sorted(f_done) == sorted(s_done)
+    for u in s_done:
+        assert list(s_done[u].generated) == list(f_done[u].generated), u
+    # spillover only adds capacity: every deadline the single run met, the
+    # fleet meets too
+    regress = [u for u in s_done if s_done[u].slo_met() is True
+               and f_done[u].slo_met() is False]
+    assert regress == []
+    # and it genuinely helped someone
+    f_met = sum(f_done[u].slo_met() is True for u in f_done)
+    s_met = sum(s_done[u].slo_met() is True for u in s_done)
+    assert f_met >= s_met
+
+
+def test_fleet_routes_by_load():
+    """Unpinned arrivals spread across backends instead of piling on one."""
+    fleet = Fleet([sim(n_slots=2, seed=0), sim(n_slots=2, seed=0)])
+    for i in range(8):
+        fleet.submit(req(uid=i, base=i + 1, gen=20))
+        fleet.step()
+    fleet.run()
+    homes = {fleet.where(u) for u in range(8)}
+    assert homes == {0, 1}
+
+
+def test_fleet_migration_preserves_slo_clock():
+    """A migrated request keeps its original arrival step: waiting on the
+    saturated backend still counts against its deadline."""
+    fleet = Fleet([sim(n_slots=1, seed=0), sim(n_slots=1, seed=0)])
+    fleet.submit(req(uid=1, base=1, gen=30), backend=0)
+    fleet.submit(req(uid=2, base=2, gen=4, e2e_slo=200), backend=0)
+    done = fleet.run()
+    assert fleet.migrations >= 1 and fleet.where(2) == 1
+    assert done[2].timing.arrival_step == 0     # not reset at hand-off
+    assert done[2].timing.queued_steps >= 1     # the wait traveled along
+
+
+def test_fleet_infeasible_errors_are_actionable():
+    fleet = Fleet([sim(n_slots=1)])
+    with pytest.raises(ValueError, match="logits-producing"):
+        fleet.submit(req(uid=1, temperature=0.7))
+    with pytest.raises(ValueError, match="max_len"):
+        fleet.submit(Request(prompt=np.arange(1, 500, dtype=np.int32),
+                             params=SamplingParams(max_tokens=4), uid=2))
+    small = Fleet([sim(n_slots=1, cache_layout="paged", num_blocks=2)])
+    with pytest.raises(ValueError, match="KV blocks"):
+        small.submit(req(uid=3, plen=64, gen=64))
+    with pytest.raises(ValueError, match="pinned"):
+        Fleet([sim(n_slots=1), sim(n_slots=1)]).submit(
+            req(uid=4, temperature=0.7), backend=1)
+    with pytest.raises(ValueError):
+        Fleet([])
+
+
+def test_fleet_aggregate_stats_and_replay():
+    trace = poisson_trace(40, seed=2, mean_iat=1.0)
+    fleet = Fleet([sim(n_slots=2, seed=0), sim(n_slots=2, seed=0)],
+                  policy="edf")
+    rep = replay(fleet, trace)
+    assert rep.n == 40
+    st = fleet.stats
+    assert st.served == 40
+    assert st.slot_total_steps == sum(
+        b.stats.slot_total_steps for b in fleet.batchers)
+
+
+# --------------------------------------------------------------------------- #
+# mini acceptance: EDF beats FIFO on the bursty trace at equal load
+# --------------------------------------------------------------------------- #
+
+def test_edf_goodput_beats_fifo_on_bursty():
+    trace = bursty_trace(250, seed=0, mean_iat=0.9)
+    goodput = {}
+    for pol in ("fifo", "edf"):
+        cb = ContinuousBatcher(sim(n_slots=4, seed=0), policy=pol)
+        goodput[pol] = replay(cb, trace).goodput
+    assert goodput["edf"] > goodput["fifo"], goodput
+
+
+# --------------------------------------------------------------------------- #
+# tensor+sim fleet: heterogeneous kinds, per-kind token parity
+# --------------------------------------------------------------------------- #
+
+def test_fleet_tensor_plus_sim_parity():
+    """A heterogeneous fleet (TensorBackend + SimBackend): each request's
+    tokens are bit-identical to a single-backend baseline of the kind it
+    was routed to — routing changes placement, never tokens."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.runtime import TensorBackend
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def tensor():
+        return TensorBackend(cfg, params, n_slots=2, max_len=64)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9, 7, 11)]
+    sp = SamplingParams(max_tokens=4)
+
+    fleet = Fleet([tensor(), sim(n_slots=2, seed=0)])
+    for i, p in enumerate(prompts):
+        # pin half to each kind so both baselines are exercised
+        fleet.submit(Request(prompt=p, params=sp, uid=i), backend=i % 2)
+    f_done = fleet.run()
+
+    base = {}
+    for kind, be in ((0, tensor()), (1, sim(n_slots=2, seed=0))):
+        cb = ContinuousBatcher(be)
+        for i, p in enumerate(prompts):
+            if i % 2 == kind:
+                cb.submit(Request(prompt=p, params=sp, uid=i))
+        base.update({u: list(r.generated) for u, r in cb.run().items()})
+    assert {u: list(r.generated) for u, r in f_done.items()} == base
