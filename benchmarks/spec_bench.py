@@ -1,0 +1,156 @@
+"""Speculative-decoding benchmark: draft-then-verify vs plain decode.
+
+Serves the same greedy workload twice through the ``ContinuousBatcher`` —
+once with plain one-token decode, once with ``spec_k`` draft-then-verify —
+and reports the *decode steps per token* win: with acceptance rate ``a``
+each verify quantum emits ``1 + a + a^2 + ...`` tokens for one pass over
+the paged KV cache, which is exactly the memory-bound amortization
+BENCH_decode.json's roofline points at.
+
+Drafts come from an :class:`~repro.serving.spec.OracleDraft` replaying the
+reference run's own tokens with a tunable per-token corruption rate, which
+pins the acceptance rate of the workload (the way spec-decode papers
+benchmark the verify machinery independently of draft-model quality);
+every corruption exercises the longest-prefix rollback path.  Greedy
+outputs are asserted bit-identical between the two runs — the speedup is
+free of semantic drift by construction.
+
+Runs the sim backend (scheduling-level win, fast) and the tensor backend
+(the real jitted multi-token verify).  Writes ``BENCH_spec.json`` at the
+repo root (schema- and gate-checked by CI):
+
+    PYTHONPATH=src python benchmarks/spec_bench.py \
+        [--spec-k 4] [--accept-prob 0.8] [--gen 32] [--out ...]
+
+Gates (asserted here and re-checked by CI on the JSON):
+  >= 1.5x steps-per-token at >= 60% acceptance, on both backends.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--accept-prob", type=float, default=0.8,
+                    help="per-draft-token oracle accept probability "
+                         "(pins the workload's acceptance rate)")
+    ap.add_argument("--out", default=str(REPO / "BENCH_spec.json"))
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.simulator import StageCosts
+    from repro.models import transformer as T
+    from repro.runtime import SimBackend, TensorBackend
+    from repro.serving import ContinuousBatcher, Request, SamplingParams
+    from repro.serving.spec import OracleDraft
+
+    cfg = get_config(args.arch).reduced(n_layers=args.layers)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len)
+               .astype(np.int32) for _ in range(args.requests)]
+    sp = SamplingParams(max_tokens=args.gen)
+    nbs = -(-args.max_len // args.block_size)
+
+    def mk(kind):
+        if kind == "tensor":
+            return TensorBackend(cfg, params, n_slots=args.slots,
+                                 max_len=args.max_len, cache_layout="paged",
+                                 block_size=args.block_size,
+                                 num_blocks=args.slots * nbs)
+        costs = StageCosts(prefill=np.array([.01, .02]),
+                           decode=np.array([.001, .002]),
+                           comm_prefill=np.array([.001]),
+                           comm_decode=np.array([.0001]),
+                           return_comm=.0001)
+        return SimBackend(costs, n_slots=args.slots, max_len=args.max_len,
+                          cache_layout="paged", block_size=args.block_size,
+                          num_blocks=args.slots * nbs)
+
+    def serve(kind, spec_k=0, draft="off", warm=False):
+        b = ContinuousBatcher(mk(kind), spec_k=spec_k, draft=draft)
+        if warm:        # compile the prefill/decode/verify shapes off-clock
+            for uid, p in enumerate(prompts):
+                b.submit(Request(p, sp, uid=1000 + uid))
+            b.run()
+            b = ContinuousBatcher(mk(kind), spec_k=spec_k, draft=draft)
+        for uid, p in enumerate(prompts):
+            b.submit(Request(p, sp, uid=uid))
+        t0 = time.perf_counter()
+        done = b.run()
+        wall = time.perf_counter() - t0
+        toks = {u: done[u].generated for u in range(len(prompts))}
+        return toks, b.stats, wall
+
+    results, summary = [], {}
+    for kind in ("sim", "tensor"):
+        warm = kind == "tensor"
+        ref_toks, ref_st, ref_wall = serve(kind, warm=warm)
+        oracle = OracleDraft(dict(ref_toks), accept_prob=args.accept_prob,
+                             seed=1)
+        spec_toks, spec_st, spec_wall = serve(kind, spec_k=args.spec_k,
+                                              draft=oracle, warm=warm)
+        assert spec_toks == ref_toks, \
+            f"{kind}: speculative tokens diverged from plain decode"
+        total = sum(len(v) for v in ref_toks.values())
+        gain = ref_st.decode_steps / spec_st.decode_steps
+        for mode, st, wall in (("ref", ref_st, ref_wall),
+                               ("spec", spec_st, spec_wall)):
+            results.append({
+                "backend": kind, "mode": mode,
+                "spec_k": args.spec_k if mode == "spec" else 0,
+                "requests": args.requests, "gen_tokens": total,
+                "decode_steps": st.decode_steps,
+                "steps_per_token": st.decode_steps / total,
+                "spec_drafted": st.spec_drafted,
+                "spec_accepted": st.spec_accepted,
+                "acceptance": st.spec_acceptance,
+                "wall_s": wall,
+            })
+        summary[f"{kind}_steps_per_token_gain"] = gain
+        summary[f"{kind}_acceptance"] = spec_st.spec_acceptance
+        print(f"spec_bench,{kind:>6}: {total} tokens in "
+              f"{ref_st.decode_steps} plain vs {spec_st.decode_steps} "
+              f"verify quanta -> {gain:.2f}x steps/token at "
+              f"{spec_st.spec_acceptance:.0%} acceptance "
+              f"(wall {ref_wall:.2f}s -> {spec_wall:.2f}s)")
+        assert gain >= 1.5, (kind, gain)
+        assert spec_st.spec_acceptance >= 0.60, \
+            (kind, spec_st.spec_acceptance)
+
+    out = {
+        "config": {
+            "arch": args.arch, "layers": args.layers,
+            "requests": args.requests, "prompt_len": args.prompt_len,
+            "gen": args.gen, "max_len": args.max_len,
+            "block_size": args.block_size, "slots": args.slots,
+            "spec_k": args.spec_k, "accept_prob": args.accept_prob,
+        },
+        "device": jax.devices()[0].platform,
+        "results": results,
+        "summary": summary,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

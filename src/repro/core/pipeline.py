@@ -309,8 +309,8 @@ class PipelineDecodeState:
     buf: jax.Array          # [n_stages, mb, d] activation entering each stage
     buf_mb: jax.Array       # [n_stages] int32: micro-batch id riding in buf
     buf_valid: jax.Array    # [n_stages] bool: warm-up validity flag
-    tokens_out: jax.Array   # [M, mb] int32: latest sampled token per mb
-    token_ready: jax.Array  # [M] bool: tokens_out[m] was produced by the ring
+    logits_out: jax.Array   # [M, mb, V] f32: latest last-stage logits per mb
+    token_ready: jax.Array  # [M] bool: logits_out[m] was produced by the ring
     tick: jax.Array         # scalar int32
 
 
@@ -333,7 +333,8 @@ def init_pipeline_decode_state(cfg: ModelConfig, spec: PipelineSpec,
         buf=jnp.zeros((spec.n_stages, mb, cfg.d_model), jnp.dtype(cfg.dtype)),
         buf_mb=jnp.zeros((spec.n_stages,), jnp.int32),
         buf_valid=jnp.zeros((spec.n_stages,), bool),
-        tokens_out=jnp.zeros((n_microbatches, mb), jnp.int32),
+        logits_out=jnp.zeros((n_microbatches, mb, cfg.vocab_size),
+                             jnp.float32),
         token_ready=jnp.zeros((n_microbatches,), bool),
         tick=jnp.zeros((), jnp.int32),
     )
@@ -353,23 +354,27 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
 
     Stage 0 ingests ``feed_tokens [mb]`` for micro-batch ``tick % M``; every
     stage advances the micro-batch riding in its buffer; the last stage
-    samples greedily and the token rides the ring back to stage 0 where it is
-    recorded in ``tokens_out`` (the paper's return-to-source hop).
+    computes the full next-token logits and they ride the ring back to stage
+    0 where they are recorded in ``logits_out`` (the paper's return-to-source
+    hop).  Sampling happens on the host — greedy and temperature>0 requests
+    both work, and speculative verify can score draft tokens against the
+    returned distribution.
 
     ``feed_valid`` (scalar bool, default True) marks this tick's ingested
     micro-batch as live.  The serving runtime feeds dead ticks with
     ``feed_valid=False`` when a micro-batch slot has no active request, so
     the garbage activation rides the ring without touching KV caches or
-    ``tokens_out`` — the same warm-up validity mechanism, driven externally.
+    ``logits_out`` — the same warm-up validity mechanism, driven externally.
 
     ``vocab_sharded`` (§Perf-C2, beyond-paper): shard the embedding table
     (rows) and LM head (columns) over the *stage* axis so each stage reads
     1/n_stages of the vocab weights per tick instead of the full tables —
     the tables are otherwise re-read every tick by every stage although only
     stage 0 embeds and only the last stage computes logits.  Reconstruction
-    costs two tiny collectives per tick: a psum of the [mb, d] embedding
-    partials and a broadcast + tie-aware argmax-combine for sampling.
-    Requires ``vocab_size % n_stages == 0``.
+    costs a psum of the [mb, d] embedding partials, a broadcast of the last
+    stage's hidden, and a scatter + psum that reassembles the full [mb, V]
+    logits from the per-stage column slices.  Requires
+    ``vocab_size % n_stages == 0``.
 
     ``block_tables`` ([M, max_ctx_blocks] int32, replicated) switches the
     KV path to the *paged* layout: each stage holds a block pool over its
@@ -380,7 +385,7 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
     mechanism to the shared pool.
     """
     ns = spec.n_stages
-    m = state.tokens_out.shape[0]
+    m = state.logits_out.shape[0]
     paged = block_tables is not None
     if vocab_sharded:
         assert cfg.vocab_size % ns == 0, (cfg.vocab_size, ns)
@@ -487,7 +492,7 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
                                          (params_l["stack"], caches_l, msk))
         x_out2 = x_out[:, 0]                                     # [mb, d]
 
-        # last stage: final norm + logits + greedy sample
+        # last stage: final norm + full next-token logits
         h = apply_norm(params_l["final_norm"], x_out, cfg.norm)
         if vocab_sharded:
             from repro.models.layers import softcap
@@ -501,36 +506,38 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
             else:
                 logit_slice = h_last[:, 0] @ params_l["lm_head"]
             logit_slice = softcap(logit_slice, cfg.final_logit_softcap)
-            lmax = jnp.max(logit_slice, axis=-1)                 # [mb]
-            lidx = jnp.argmax(logit_slice, axis=-1) + base       # [mb] global
-            gmax = jax.lax.pmax(lmax, stage_axis)
-            cand = jnp.where(lmax >= gmax, lidx, cfg.vocab_size)
-            # first-occurrence tie-break == jnp.argmax semantics
-            sampled = jax.lax.pmin(cand, stage_axis).astype(jnp.int32)
+            # reassemble the full [mb, V] row: scatter the local column
+            # slice at its vocab offset and psum — identical on all stages.
+            full = jnp.zeros((logit_slice.shape[0], cfg.vocab_size),
+                             jnp.float32)
+            full = jax.lax.dynamic_update_slice_in_dim(
+                full, logit_slice.astype(jnp.float32), base, axis=1)
+            logits = jax.lax.psum(full, stage_axis)              # [mb, V]
         else:
             logits = lm_logits(params_l, cfg, h)[:, 0]           # [mb, V]
-            sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [mb]
+            logits = logits.astype(jnp.float32)
 
-        # ring shift: activations to the next stage; token closes the ring
+        # ring shift: activations to the next stage; logits close the ring
         perm = [(i, (i + 1) % ns) for i in range(ns)]
         nxt_buf = jax.lax.ppermute(x_out2, stage_axis, perm)
         nxt_mb = jax.lax.ppermute(mb_idx, stage_axis, perm)
         nxt_valid = jax.lax.ppermute(valid, stage_axis, perm)
-        token_ring = jax.lax.ppermute(sampled, stage_axis, perm)  # last->0
+        logits_ring = jax.lax.ppermute(logits, stage_axis, perm)  # last->0
         done_mb = jax.lax.ppermute(mb_idx, stage_axis, perm)
         done_valid = jax.lax.ppermute(valid & (sid == ns - 1), stage_axis,
                                       perm)
 
-        # stage 0 records the completed token; replicate via psum over stages
+        # stage 0 records the completed logits; replicate via psum
         upd = (sid == 0) & done_valid
         onehot = (jnp.arange(m) == done_mb) & upd                # [M]
-        tok_update = jnp.where(onehot[:, None], token_ring[None, :], 0)
-        tok_update = jax.lax.psum(tok_update, stage_axis)
+        log_update = jnp.where(onehot[:, None, None],
+                               logits_ring[None, :, :], 0.)
+        log_update = jax.lax.psum(log_update, stage_axis)
         ready_update = jax.lax.psum(onehot.astype(jnp.int32), stage_axis) > 0
 
         return (jax.tree.map(lambda x: x[None], new_caches),
                 nxt_buf[None], nxt_mb[None], nxt_valid[None],
-                tok_update, ready_update)
+                log_update, ready_update)
 
     out = shard_map(
         body, mesh=mesh,
@@ -539,16 +546,17 @@ def pipeline_decode_tick(cfg: ModelConfig, stage_params: PyTree,
                   P(stage_axis), P(batch_axes), P(), P(), P()),
         out_specs=(cache_specs,
                    P(stage_axis, batch_axes, None), P(stage_axis),
-                   P(stage_axis), P(None, batch_axes), P(None)),
+                   P(stage_axis), P(None, batch_axes, None), P(None)),
         check_vma=False,
     )(stage_params["stack"], other, mask, state.caches, state.buf,
       state.buf_mb, state.buf_valid, feed_tokens,
       jnp.asarray(feed_valid, bool), state.tick, block_tables)
-    new_caches, buf, buf_mb, buf_valid, tok_update, ready = out
+    new_caches, buf, buf_mb, buf_valid, log_update, ready = out
 
-    tokens_out = jnp.where(ready[:, None], tok_update, state.tokens_out)
+    logits_out = jnp.where(ready[:, None, None], log_update,
+                           state.logits_out)
     token_ready = state.token_ready | ready
     return PipelineDecodeState(
         caches=new_caches, buf=buf, buf_mb=buf_mb, buf_valid=buf_valid,
-        tokens_out=tokens_out, token_ready=token_ready,
+        logits_out=logits_out, token_ready=token_ready,
         tick=state.tick + 1)

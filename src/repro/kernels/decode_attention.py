@@ -92,6 +92,64 @@ def _paged_decode_kernel(bt_ref, *refs, scale: float,
     _decode_kernel(*refs, scale=scale, softcap=softcap)
 
 
+def _verify_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, softcap: Optional[float]):
+    """Multi-token (speculative-verify) twin of :func:`_decode_kernel`.
+
+    Block shapes: q/o ``[1, kq, g, d]`` (``kq`` draft positions × the kv
+    head's GQA query group), k/v ``[1, bc, 1, d]``, mask ``[1, kq, bc]``
+    (per-q-position causality: position ``p+i`` may attend a strictly
+    larger key set than ``p``); scratch m/l ``[kq*g, 1]``, acc
+    ``[kq*g, d]``.  The q rows are flattened to one ``[kq*g, d]`` block so
+    the streaming structure — each cache block DMA'd exactly once per
+    verify step, amortized over all ``kq`` tokens — is identical to the
+    single-token kernel's.
+    """
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kq, g, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    bc = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32).reshape(kq * g, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)                       # [bc, d]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    mask = jnp.broadcast_to(mask_ref[0][:, None, :],
+                            (kq, g, bc)).reshape(kq * g, bc)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [kq*g, bc]
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).reshape(kq, g, d).astype(
+            o_ref.dtype)
+
+
+def _paged_verify_kernel(bt_ref, *refs, scale: float,
+                         softcap: Optional[float]):
+    del bt_ref
+    _verify_kernel(*refs, scale=scale, softcap=softcap)
+
+
 def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
                          mask: jax.Array, *, softcap: Optional[float] = None,
                          block_c: int = 512, interpret: bool = False,
@@ -191,5 +249,64 @@ def paged_decode_attention_bhd(q: jax.Array, k_pool: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(bt, q, k_pool, v_pool, mask)
+
+
+def paged_verify_attention_bhd(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, bt: jax.Array,
+                               mask: jax.Array, *,
+                               softcap: Optional[float] = None,
+                               interpret: bool = False) -> jax.Array:
+    """Paged GQA *verify*: ``kq`` draft query tokens per slot in one pass.
+
+    q [B, KQ, H, D]; pools [NB+1, bs, KH, D]; bt [B, nbs] pre-clipped
+    physical block ids; mask [B, KQ, nbs*bs] bool — row ``i`` carries the
+    causality set of position ``pos + i`` (plus ring validity/window), so
+    draft token ``i`` attends every accepted key *and* the keys scattered
+    for drafts ``0..i`` but not later ones.
+
+    Returns [B, KQ, H, D].  Same scalar-prefetched block-table streaming as
+    :func:`paged_decode_attention_bhd` — each pool block is DMA'd exactly
+    once per verify step, amortized over all ``kq`` tokens, which is the
+    whole speculative-decoding bandwidth win.  With ``KQ == 1`` the math
+    and accumulation order degenerate to the decode kernel's exactly.
+    """
+    b, kq, h, d = q.shape
+    bs, kh = k_pool.shape[1], k_pool.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    nbs = bt.shape[1]
+    assert bt.shape == (b, nbs), bt.shape
+    assert mask.shape == (b, kq, nbs * bs), (mask.shape, b, kq, nbs, bs)
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, kh, nbs)
+
+    q_spec = pl.BlockSpec((1, kq, g, d),
+                          lambda b_, j, ib, bt_: (b_, 0, j, 0))
+    kv_spec = pl.BlockSpec(
+        (1, bs, 1, d),
+        lambda b_, j, ib, bt_: (bt_[b_, ib], 0, j, 0))
+    mask_spec = pl.BlockSpec((1, kq, bs),
+                             lambda b_, j, ib, bt_: (b_, 0, ib))
+    out_spec = pl.BlockSpec((1, kq, g, d),
+                            lambda b_, j, ib, bt_: (b_, 0, j, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, mask_spec],
+        out_specs=out_spec,
+        scratch_shapes=[
+            pltpu.VMEM((kq * g, 1), jnp.float32),  # m
+            pltpu.VMEM((kq * g, 1), jnp.float32),  # l
+            pltpu.VMEM((kq * g, d), jnp.float32),  # acc
+        ])
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kq, h, d), q.dtype),
         interpret=interpret,
     )(bt, q, k_pool, v_pool, mask)

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import (decode_attention_bhd,
-                                            paged_decode_attention_bhd)
+                                            paged_decode_attention_bhd,
+                                            paged_verify_attention_bhd)
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.int8_matmul import int8_matmul_pallas, quantize_int8
 from repro.kernels.rglru_scan import rglru_scan_pallas
@@ -120,6 +121,38 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_verify_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           bt: jax.Array, key_pos: jax.Array, pos: jax.Array,
+                           *, window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Speculative-verify attention: ``KQ`` draft tokens per slot, one pass.
+
+    q [B, KQ, H, D]; pools/bt/key_pos as :func:`paged_decode_attention`;
+    pos [B] is the position of the *first* fed token, so q row ``i``
+    decodes at position ``pos + i`` and its mask admits keys with
+    ``key_pos <= pos + i`` — the per-row causality that lets the drafts'
+    freshly-scattered keys be attended by later drafts only.  Rows past a
+    slot's true draft count are fully masked by construction when their
+    keys were never scattered; callers discard their outputs regardless.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, kq = q.shape[0], q.shape[1]
+    nbs = bt.shape[1]
+    scratch = k_pool.shape[0] - 1
+    assert key_pos.shape == (b, nbs * k_pool.shape[1]), \
+        (key_pos.shape, bt.shape, k_pool.shape)
+    pos_i = pos[:, None, None] + jnp.arange(kq)[None, :, None]   # [B,KQ,1]
+    mask = (key_pos[:, None, :] >= 0) & (key_pos[:, None, :] <= pos_i)
+    if window is not None:
+        mask &= key_pos[:, None, :] > pos_i - window
+    bt_read = jnp.where(bt >= 0, bt, scratch).astype(jnp.int32)
+    return paged_verify_attention_bhd(q, k_pool, v_pool, bt_read, mask,
+                                      softcap=softcap, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
 def rglru_scan(log_a: jax.Array, b: jax.Array,
                h0: Optional[jax.Array] = None, *, block_r: int = 128,
@@ -163,4 +196,5 @@ def int8_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
 
 
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
-           "rglru_scan", "int8_matmul", "quantize_int8"]
+           "paged_verify_attention", "rglru_scan", "int8_matmul",
+           "quantize_int8"]

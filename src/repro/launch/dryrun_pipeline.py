@@ -117,7 +117,7 @@ def run_pipeline_one(arch: str, shape_name: str, multi_pod: bool = False,
             buf=NamedSharding(mesh, P(stage_axis, batch_axes, None)),
             buf_mb=NamedSharding(mesh, P(stage_axis)),
             buf_valid=NamedSharding(mesh, P(stage_axis)),
-            tokens_out=NamedSharding(mesh, P(None, batch_axes)),
+            logits_out=NamedSharding(mesh, P(None, batch_axes, None)),
             token_ready=NamedSharding(mesh, P(None)),
             tick=NamedSharding(mesh, P()),
         )

@@ -12,6 +12,7 @@ and never pads a prompt:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode tp --batch 4 --gen 16 [--kvint8] [--stream] [--varlen] \
         [--cache-layout paged --impl pallas] \
+        [--cache-layout paged --spec-k 4 --draft ngram] \
         [--policy edf --ttft-slo 8 --e2e-slo 64]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode pipeline --stages 4            # devices default to --stages
@@ -69,6 +70,16 @@ def main():
                     help="chunked prefill: stream prompts through prefill "
                          "this many tokens per scheduler quantum, "
                          "interleaved with decode (0 = monolithic)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: verify up to K tokens per "
+                         "quantum (the last emitted token + K-1 drafts) in "
+                         "one multi-query pass; greedy outputs stay "
+                         "bit-identical.  Needs --cache-layout paged; "
+                         "0/1 = off")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft source for --spec-k: 'ngram' (prompt-lookup "
+                         "self-speculation, default), 'ngram:<max>', or "
+                         "'off' (verify quantum carries no drafts)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give every request the same random prefix of this "
                          "many tokens (demo/validation workload for "
@@ -168,7 +179,7 @@ def main():
             cfg, params, n_slots=args.slots or args.batch,
             max_len=args.max_len, mesh=mesh, impl=args.impl, **kv_kw),
             seed=args.seed, min_bucket=args.min_bucket, prefill_chunk=chunk,
-            policy=args.policy)
+            policy=args.policy, spec_k=args.spec_k, draft=args.draft)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -183,13 +194,40 @@ def main():
             objective="throughput", kind="pipeline", params=params,
             n_slots=args.slots or None, max_len=args.max_len, seed=args.seed,
             min_bucket=args.min_bucket, impl=args.impl, prefill_chunk=chunk,
-            policy=args.policy, **kv_kw)
+            policy=args.policy, spec_k=args.spec_k, draft=args.draft, **kv_kw)
         n_stages = llm.backend.spec.n_stages
         if args.devices > n_stages:
             print(f"note: using {n_stages} of {args.devices} devices "
                   f"(stage axis only; no data-parallel lanes yet)")
         print(f"planned stages (periods per stage): "
               f"{llm.backend.spec.periods_per_stage}")
+
+    # every user-passed flag that ends up inert gets one explicit line —
+    # "silently ignored" cost real debugging time (see docs/runtime.md)
+    def _inert(flag, why):
+        print(f"note: {flag} has no effect on this deployment: {why}")
+
+    info = llm.backend.info
+    if args.prefix_cache and not info.prefix_caching:
+        _inert("--prefix-cache",
+               f"backend reports prefix_caching=False over cache_layout="
+               f"{info.cache_layout!r} (needs --cache-layout paged and an "
+               f"all-attention model)")
+    if args.cache_layout != "paged":
+        if args.block_size != 16:
+            _inert("--block-size", "only the paged layout blocks the KV pool")
+        if args.kv_blocks:
+            _inert("--kv-blocks",
+                   "only the paged layout has a shared block pool")
+    if args.spec_k >= 2 and not info.spec_decode:
+        _inert("--spec-k",
+               f"backend reports spec_decode=False (cache_layout="
+               f"{info.cache_layout!r}); serving plain decode")
+    if args.draft != "ngram" and args.spec_k < 2:
+        _inert("--draft", "draft sources only feed --spec-k >= 2")
+    if args.priority is not None and args.policy == "fifo":
+        _inert("--priority", "FIFO ignores service classes; pass "
+                             "--policy priority")
 
     sp = SamplingParams(max_tokens=args.gen,
                         priority=args.priority or 0,
@@ -216,6 +254,12 @@ def main():
         print(f"  prefix cache: {st.prefix_hits} hits "
               f"({st.prefix_hit_tokens} prompt tokens reused); "
               f"{st.prefill_chunks} prefill chunk passes")
+    if st.spec_drafted:
+        print(f"  spec decode (k={args.spec_k}, draft={args.draft}): "
+              f"{st.spec_accepted}/{st.spec_drafted} drafts accepted "
+              f"({st.spec_acceptance:.0%}), {total} tokens in "
+              f"{st.decode_steps} verify quanta "
+              f"({total / max(st.decode_steps, 1):.2f} tokens/quantum)")
     if args.ttft_slo is not None or args.e2e_slo is not None:
         met = sum(1 for o in outs if o.slo_met())
         print(f"  SLO ({args.policy}): {met}/{len(outs)} met "

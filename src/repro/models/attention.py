@@ -45,6 +45,41 @@ def _check_decode_impl(impl: str) -> None:
             f"unknown decode impl {impl!r}: expected one of {DECODE_IMPLS}")
 
 
+def effective_decode_impl(impl: str, cfg: ModelConfig) -> str:
+    """The impl the paged decode/verify paths will actually execute.
+
+    ``impl="pallas"`` with ``kv_dtype="int8"`` runs the XLA gather+dequant
+    reference (per-block in-kernel dequant is future work) — backends
+    surface this in ``BackendInfo.attn_impl`` so benchmarks can assert the
+    kernel they think they're measuring is the one running.
+    """
+    if impl == "pallas" and cfg.kv_dtype == "int8":
+        return "xla"
+    return impl
+
+
+_INT8_PALLAS_NOTED = False
+
+
+def _note_int8_pallas_fallback(cfg: ModelConfig) -> None:
+    """The pallas->xla downgrade for int8 KV used to be silent; now it warns
+    once per process, or raises when ``REPRO_STRICT_IMPL`` is set (CI /
+    benchmarks that must fail rather than quietly measure the wrong path).
+    """
+    global _INT8_PALLAS_NOTED
+    import os
+    import warnings
+    msg = ("impl='pallas' with kv_dtype='int8' falls back to the XLA "
+           "gather+dequant decode path (in-kernel dequant not implemented); "
+           "set impl='xla' to silence, or unset kv_dtype int8 to get the "
+           "fused kernel")
+    if os.environ.get("REPRO_STRICT_IMPL"):
+        raise ValueError(msg + " (strict: REPRO_STRICT_IMPL is set)")
+    if not _INT8_PALLAS_NOTED:
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        _INT8_PALLAS_NOTED = True
+
+
 def init_attention(pb: ParamBuilder, name: str, cfg: ModelConfig):
     d, q, kv, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
     sub = pb.scope(name)
@@ -508,6 +543,8 @@ def attend_decode_paged(params: Dict, cfg: ModelConfig, spec: BlockSpec,
             window=spec.window, softcap=cfg.attn_logit_softcap)
         out = out.reshape(b, 1, cfg.q_dim)
     else:
+        if impl == "pallas":
+            _note_int8_pallas_fallback(cfg)
         # reference / int8 fallback: gather the slot's blocks back in ring
         # order ([B, C_pad, n_kv, hd]); unmapped entries read block 0
         # garbage, masked via key_pos == -1
@@ -529,6 +566,101 @@ def attend_decode_paged(params: Dict, cfg: ModelConfig, spec: BlockSpec,
     new_cache = {"k_pool": kp, "v_pool": vp, "bt": cache["bt"],
                  "key_pos": new_key_pos if not shared else new_key_pos[0],
                  "pos": new_pos if not shared else new_pos[0]}
+    if quant:
+        new_cache["k_scale_pool"] = ksp
+        new_cache["v_scale_pool"] = vsp
+    return y, new_cache
+
+
+def attend_verify_paged(params: Dict, cfg: ModelConfig, spec: BlockSpec,
+                        x: jax.Array, lens: jax.Array, cache: Dict,
+                        impl: str = "xla") -> Tuple[jax.Array, Dict]:
+    """Multi-token speculative *verify* against a paged KV cache.
+
+    x [B, K, d] — row ``b``'s first ``lens[b]`` tokens are the last
+    accepted token plus the draft continuation, left-aligned, occupying
+    absolute positions ``pos[b] .. pos[b] + lens[b] - 1``.  ``lens == 0``
+    rows are idle: their writes are redirected to the scratch block and
+    their ``key_pos``/``pos`` stay frozen, exactly like a masked decode
+    row.  Only valid for specs where ``prefix_sharing_supported`` holds
+    (ring slot == position, no wrap), which is what makes rejection exact:
+    the caller rolls back by invalidating ``key_pos >= pos + accepted`` —
+    no surviving key is ever overwritten by a rejected draft.
+
+    All ``K`` tokens are scattered into the pool first, then attended in
+    one pass.  ``impl="pallas"`` runs the multi-q streaming kernel
+    (:func:`repro.kernels.ops.paged_verify_attention`): each cache block is
+    DMA'd once per *verify step* instead of once per token, which is the
+    speculative-decoding bandwidth win.  With ``K == 1`` the kernel math
+    degenerates to the decode kernel's exactly, so greedy spec decode is
+    bit-identical to plain decode.  int8 KV takes the gather+dequant
+    reference (same fallback — and the same one-time warning — as
+    :func:`attend_decode_paged`).
+    """
+    _check_decode_impl(impl)
+    b, kq = x.shape[:2]
+    pos, bt, key_pos = cache["pos"], cache["bt"], cache["key_pos"]
+    c_pad = key_pos.shape[-1]
+    bsz = cache["k_pool"].shape[1]
+    nbs = c_pad // bsz
+    scratch = cache["k_pool"].shape[0] - 1
+    positions = pos[:, None] + jnp.arange(kq, dtype=pos.dtype)[None]  # [B,K]
+    valid = jnp.arange(kq)[None, :] < lens[:, None]                   # [B,K]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    # scatter all K tokens into their slots' blocks (scratch for idle/pad
+    # rows and unmapped blocks); no wrap => ring slot == position
+    ring = positions % c_pad
+    blk = jnp.clip(ring // bsz, 0, nbs - 1)
+    off = ring % bsz
+    phys = jnp.take_along_axis(bt, blk, axis=1)                       # [B,K]
+    tgt = jnp.where(valid & (phys >= 0), phys, scratch)
+    quant = cfg.kv_dtype == "int8"
+    if quant:
+        k8, ks = _quantize_kv(k)
+        v8, vs = _quantize_kv(v)
+        kp = cache["k_pool"].at[tgt, off].set(k8)
+        vp = cache["v_pool"].at[tgt, off].set(v8)
+        ksp = cache["k_scale_pool"].at[tgt, off].set(ks)
+        vsp = cache["v_scale_pool"].at[tgt, off].set(vs)
+    else:
+        kp = cache["k_pool"].at[tgt, off].set(
+            k.astype(cache["k_pool"].dtype))
+        vp = cache["v_pool"].at[tgt, off].set(
+            v.astype(cache["v_pool"].dtype))
+
+    rows = jnp.arange(b)[:, None]
+    prev = key_pos[rows, ring]
+    new_key_pos = key_pos.at[rows, ring].set(
+        jnp.where(valid, positions.astype(jnp.int32), prev))
+    new_pos = (pos + lens).astype(pos.dtype)
+
+    if impl == "pallas" and not quant:
+        from repro.kernels import ops as kops
+        out = kops.paged_verify_attention(
+            q, kp, vp, bt[:, :nbs], new_key_pos, pos,
+            window=spec.window, softcap=cfg.attn_logit_softcap)
+        out = out.reshape(b, kq, cfg.q_dim)
+    else:
+        if impl == "pallas":
+            _note_int8_pallas_fallback(cfg)
+        read = jnp.clip(bt[:, :nbs], 0, None)
+        if quant:
+            ck = _dequantize_kv(
+                kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                ksp[read].reshape(b, c_pad, cfg.n_kv_heads), k.dtype)
+            cv = _dequantize_kv(
+                vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1),
+                vsp[read].reshape(b, c_pad, cfg.n_kv_heads), v.dtype)
+        else:
+            ck = kp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+            cv = vp[read].reshape(b, c_pad, cfg.n_kv_heads, -1)
+        out = _sdpa(cfg, spec, q, ck, cv, positions, new_key_pos,
+                    k_valid=new_key_pos >= 0)
+    y = out @ params["wo"]
+    y = logical_constraint(y, "batch", None, "embed")
+    new_cache = {"k_pool": kp, "v_pool": vp, "bt": bt,
+                 "key_pos": new_key_pos, "pos": new_pos}
     if quant:
         new_cache["k_scale_pool"] = ksp
         new_cache["v_scale_pool"] = vsp

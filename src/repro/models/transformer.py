@@ -188,6 +188,7 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
                  cache: Optional[Dict], impl: str,
                  write_mask: Optional[jax.Array] = None,
                  seq_valid: Optional[jax.Array] = None,
+                 verify_lens: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (x_out, new_cache, aux_loss).  ``write_mask`` gates paged
     KV-pool writes (idle slots / dead pipeline ticks scatter to scratch).
@@ -197,10 +198,11 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
     mixers treat them as state-preserving no-ops, and the block re-zeroes
     pad activations on exit so they cannot leak into later layers (e.g.
     through a causal conv window)."""
-    if mode == "extend" and spec.kind != "attn":
+    if mode in ("extend", "verify") and spec.kind != "attn":
         raise ValueError(
-            f"extend (chunked/offset prefill) requires attention caches; "
-            f"got {spec.kind!r} — gate via kvcache.prefix_sharing_supported")
+            f"{mode} (chunked/offset prefill or speculative verify) requires "
+            f"attention caches; got {spec.kind!r} — gate via "
+            f"kvcache.prefix_sharing_supported")
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x, cfg.norm)
     new_cache = cache
@@ -214,6 +216,9 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, params: Dict,
             mix, new_cache = attn.extend_cache(params["mixer"], cfg, spec, h,
                                                positions, seq_valid, cache,
                                                impl)
+        elif mode == "verify":
+            mix, new_cache = attn.attend_verify_paged(
+                params["mixer"], cfg, spec, h, verify_lens, cache, impl)
         elif is_paged_attn_cache(cache):
             mix, new_cache = attn.attend_decode_paged(
                 params["mixer"], cfg, spec, h, cache, impl,
@@ -463,6 +468,67 @@ def extend_step(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
                                     positions, "extend",
                                     caches["tail"][f"t{t}"], impl,
                                     seq_valid=seq_valid)
+            new_tail[f"t{t}"] = nc
+        new_caches["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params, cfg, x)
+    return logits, new_caches
+
+
+def verify_step(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+                caches: PyTree, lens: jax.Array,
+                impl: str = "xla") -> Tuple[jax.Array, PyTree]:
+    """Speculative verify: score ``tokens`` [B, K] — row ``b``'s first
+    ``lens[b]`` entries are the last accepted token followed by draft
+    continuations, left-aligned — in ONE forward pass at absolute positions
+    ``pos[b] .. pos[b]+lens[b]-1`` (``pos`` read from the caches).
+
+    Returns (logits [B, K, vocab], updated caches): ``logits[b, i]`` is the
+    target model's next-token distribution *after* fed token ``i``, so
+    greedy acceptance compares ``argmax(logits[b, i-1])`` against fed token
+    ``i``.  ``lens[b] == 0`` rows are idle (writes to scratch, state
+    frozen); ``lens[b] == 1`` is exactly a decode step (and with K == 1 the
+    pallas path is bit-identical to :func:`decode_step`'s).  The caches
+    come back advanced by ``lens`` with all K candidate keys written —
+    callers must roll back rejected positions (invalidate
+    ``key_pos >= pos + accepted``, reset ``pos``).  Only valid for paged
+    all-attention deployments (``kvcache.prefix_sharing_supported``);
+    recurrent kinds raise.
+    """
+    b, kq = tokens.shape[:2]
+    lens = jnp.asarray(lens, jnp.int32)
+    pos = _first_pos(caches).astype(jnp.int32)                    # [B]
+    cols = jnp.arange(kq, dtype=jnp.int32)[None, :]
+    positions = pos[:, None] + cols                               # [B, K]
+    seq_valid = cols < lens[:, None]
+    x = _embed_inputs(cfg, params, tokens, positions)
+    x = jnp.where(seq_valid[..., None], x, 0)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.n_full_periods > 0:
+        def body(x_c, per_period):
+            p_params, p_caches = per_period
+            new_p = {}
+            for p, spec in enumerate(cfg.pattern):
+                x_c, nc, _ = _apply_block(cfg, spec, p_params[f"p{p}"], x_c,
+                                          positions, "verify",
+                                          p_caches[f"p{p}"], impl,
+                                          seq_valid=seq_valid,
+                                          verify_lens=lens)
+                new_p[f"p{p}"] = nc
+            return x_c, new_p
+
+        x, new_caches["stack"] = jax.lax.scan(
+            body, x, (params["stack"], caches["stack"]))
+
+    if cfg.tail:
+        new_tail = {}
+        for t, spec in enumerate(cfg.tail):
+            x, nc, _ = _apply_block(cfg, spec, params["tail"][f"t{t}"], x,
+                                    positions, "verify",
+                                    caches["tail"][f"t{t}"], impl,
+                                    seq_valid=seq_valid, verify_lens=lens)
             new_tail[f"t{t}"] = nc
         new_caches["tail"] = new_tail
 

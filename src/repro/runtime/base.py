@@ -240,14 +240,24 @@ class SlotPager:
 
 @dataclass
 class SlotEvent:
-    """One slot produced its next token (or the logits to sample it from)."""
+    """One slot produced its next token (or the logits to sample it from).
+
+    Decode events carry ``logits [V]`` or a pre-sampled ``token``.
+    Speculative *verify* events (from :meth:`InferenceBackend.verify_step`)
+    carry ``logits [n, V]`` — one next-token distribution per fed token —
+    or ``tokens [n]`` for backends that sample in-backend; the scheduler
+    runs longest-prefix acceptance over them and reports the kept count
+    back via :meth:`InferenceBackend.accept`.
+    """
 
     slot: int
-    logits: Optional[np.ndarray] = None   # [V] float — scheduler samples
+    logits: Optional[np.ndarray] = None   # [V] or [n, V] — scheduler samples
     token: Optional[int] = None           # pre-sampled (greedy in-SPMD)
+    tokens: Optional[np.ndarray] = None   # [n] pre-sampled verify outputs
 
     def __post_init__(self):
-        assert (self.logits is not None) or (self.token is not None)
+        assert (self.logits is not None) or (self.token is not None) \
+            or (self.tokens is not None)
 
 
 @dataclass(frozen=True)
@@ -281,6 +291,12 @@ class BackendInfo:
     #: advisory decode rate (tokens/s per busy slot-step) for dispatcher
     #: cost estimates; 0.0 = unknown (the Fleet treats unknown as 1.0)
     tokens_per_s: float = 0.0
+    #: decode impl actually executing (may differ from the requested impl —
+    #: e.g. pallas+int8 KV downgrades to the xla gather path); benchmarks
+    #: assert on this instead of trusting their own flag
+    attn_impl: str = "xla"
+    #: verify_step/accept (multi-token speculative verify) available
+    spec_decode: bool = False
 
     @property
     def paged(self) -> bool:
@@ -380,6 +396,32 @@ class InferenceBackend(abc.ABC):
         first-token events (pipelined backends may return ``[]`` and emit
         from a later ``decode_step``).  Raises :class:`PoolExhausted`
         before mutating anything when the pool cannot back the chunk."""
+        raise NotImplementedError(type(self).__name__)
+
+    # -- speculative decode (draft-then-verify) ------------------------- #
+    # Optional protocol: backends advertising ``info.spec_decode``
+    # implement these two.  One verify quantum scores every fed token in a
+    # single forward pass; the scheduler accepts a prefix and the backend
+    # rolls rejected positions back.  ``verify_step`` with 1-token feeds is
+    # semantically a ``decode_step`` (and must match it bit-for-bit under
+    # greedy sampling).
+
+    def verify_step(self, feeds: Dict[int, np.ndarray],
+                    ) -> List[SlotEvent]:
+        """Score ``feeds[slot]`` (int32 [n], n >= 1: the last accepted
+        token followed by ``n-1`` draft continuations) for each live slot
+        in one forward pass.  Returns one event per fed slot whose
+        ``logits`` is [n, V] (or ``tokens`` [n] when sampling in-backend):
+        entry ``i`` is the model's next-token output after fed token ``i``.
+        All ``n`` candidate keys are written to the slot's cache; the
+        caller MUST follow with :meth:`accept` before the next quantum."""
+        raise NotImplementedError(type(self).__name__)
+
+    def accept(self, counts: Dict[int, int]) -> None:
+        """Commit ``counts[slot]`` tokens of the last ``verify_step``'s
+        feeds-plus-outputs for each slot and roll back the rest: cache
+        state must end exactly as if the slot had decoded those tokens
+        one-by-one (rejected draft keys invalidated, position rewound)."""
         raise NotImplementedError(type(self).__name__)
 
     @abc.abstractmethod

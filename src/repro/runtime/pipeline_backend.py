@@ -17,9 +17,19 @@ to them afterwards.
 
 The quantum is one tick.  Each ``decode_step`` feeds micro-batch
 ``tick % M`` and completes (at most) the micro-batch fed ``n_stages - 1``
-ticks ago, whose greedily sampled token rode the ring back to stage 0 — so
-events carry ``token``, not ``logits`` (greedy-only, like the paper's
-last-stage sampling).
+ticks ago, whose last-stage logits rode the ring back to stage 0 — so
+events carry ``logits`` and the scheduler samples on the host (greedy *and*
+temperature>0 both work; the paper's greedy last-stage sampling is the
+host's default policy, not a backend constraint).
+
+Speculative decoding (``verify_step``/``accept``) teacher-forces each
+slot's draft tokens through the same tick protocol, one token per turn,
+and returns the per-position logits stacked ``[n, V]``; rejected-suffix KV
+is invalidated by rewriting the slot's ``key_pos`` rows across every
+stage's pool (ring slot == absolute position under the paged spec gate).
+Unlike the tensor backend there is no multi-token kernel win here — the
+payoff is protocol compatibility: a spec-decoding scheduler can drive
+tensor and pipeline deployments through one code path.
 
 ``cache_layout="paged"`` swaps each stage's dense per-micro-batch KV for a
 block pool over the stage's own layer range (``models/kvcache.py``), with
@@ -45,6 +55,7 @@ import numpy as np
 
 from repro.core import pipeline as PL
 from repro.models import kvcache as KV
+from repro.models.attention import effective_decode_impl
 from repro.models.config import ModelConfig
 from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
                                 SlotEvent, SlotPager)
@@ -149,7 +160,7 @@ class PipelineBackend(InferenceBackend):
                 return PL.PipelineDecodeState(
                     caches=caches, buf=state.buf, buf_mb=state.buf_mb,
                     buf_valid=state.buf_valid,
-                    tokens_out=state.tokens_out.at[slot].set(0),
+                    logits_out=state.logits_out.at[slot].set(0.),
                     token_ready=state.token_ready.at[slot].set(False),
                     tick=state.tick)
         else:
@@ -161,7 +172,7 @@ class PipelineBackend(InferenceBackend):
                 return PL.PipelineDecodeState(
                     caches=caches, buf=state.buf, buf_mb=state.buf_mb,
                     buf_valid=state.buf_valid,
-                    tokens_out=state.tokens_out.at[slot].set(0),
+                    logits_out=state.logits_out.at[slot].set(0.),
                     token_ready=state.token_ready.at[slot].set(False),
                     tick=state.tick)
 
@@ -175,10 +186,34 @@ class PipelineBackend(InferenceBackend):
             return PL.PipelineDecodeState(
                 caches=state.caches, buf=state.buf, buf_mb=state.buf_mb,
                 buf_valid=state.buf_valid & (state.buf_mb != slot),
-                tokens_out=state.tokens_out, token_ready=state.token_ready,
+                logits_out=state.logits_out, token_ready=state.token_ready,
                 tick=state.tick)
 
         self._kill_fn = jax.jit(_kill, donate_argnums=(0,))
+
+        def _rollback(state: PL.PipelineDecodeState, slot,
+                      new_pos) -> PL.PipelineDecodeState:
+            # spec-decode rejection: drop the slot's KV for every position
+            # >= new_pos across all stages/layers.  Paged + prefix-sharing
+            # gating guarantees ring slot == absolute position, so the
+            # key_pos *values* are the positions themselves.
+            caches = {}
+            for key, entry in state.caches.items():
+                if KV.is_paged_attn_cache(entry):
+                    kp = entry["key_pos"][:, :, slot]       # [ns, l_max, C]
+                    kp = jnp.where(kp >= new_pos, -1, kp)
+                    e = dict(entry)
+                    e["key_pos"] = entry["key_pos"].at[:, :, slot].set(kp)
+                    e["pos"] = entry["pos"].at[:, :, slot].set(new_pos)
+                    caches[key] = e
+                else:
+                    caches[key] = entry
+            return PL.PipelineDecodeState(
+                caches=caches, buf=state.buf, buf_mb=state.buf_mb,
+                buf_valid=state.buf_valid, logits_out=state.logits_out,
+                token_ready=state.token_ready, tick=state.tick)
+
+        self._rollback_fn = jax.jit(_rollback, donate_argnums=(0,))
 
         self._tick = 0
         self._prompts: Dict[int, np.ndarray] = {}       # slot -> [plen, lanes]
@@ -188,7 +223,14 @@ class PipelineBackend(InferenceBackend):
         # completions of a preempted occupancy that were still in the ring
         # when the slot was freed and re-admitted
         self._inflight: Dict[int, Tuple[int, int, int]] = {}
+        # feed tick -> (slot, draft index, epoch) for in-flight verify feeds
+        self._vflight: Dict[int, Tuple[int, int, int]] = {}
         self._epoch: Dict[int, int] = {}
+        # spec decode rides the paged pool with absolute ring positions —
+        # same gate as prefix sharing, plus request-granular slots
+        self._spec_ok = self._paged_exec and lanes == 1 \
+            and KV.prefix_sharing_supported(cfg, max_len)
+        self._pending: Dict[int, Tuple[int, int, str]] = {}
         self._base: Dict[int, int] = {}        # slot -> adopted prefix length
         self._stream_done: Dict[int, bool] = {}  # all chunks fed?
         self._full_tokens: Dict[int, np.ndarray] = {}  # for registration
@@ -202,7 +244,10 @@ class PipelineBackend(InferenceBackend):
             cache_bytes_per_slot=cache_bytes // m,
             param_bytes=sum(l.nbytes
                             for l in jax.tree.leaves(self.stage_params)),
-            samples_in_backend=True,
+            samples_in_backend=False,
+            attn_impl=effective_decode_impl(impl, cfg)
+            if self._paged_exec else impl,
+            spec_decode=self._spec_ok,
             cache_layout=cache_layout,
             block_size=block_size if cache_layout == "paged" else 0,
             total_blocks=self.num_blocks,
@@ -383,24 +428,167 @@ class PipelineBackend(InferenceBackend):
         if dslot in self._prompts and epoch == self._epoch.get(dslot, 0) \
                 and self._stream_done.get(dslot, True) \
                 and r >= len(self._prompts[dslot]) - 1:
-            tok = np.asarray(self.state.tokens_out[dslot])     # [lanes]
+            arr = np.asarray(self.state.logits_out[dslot])     # [lanes, V]
             self._gen_ready[dslot] += 1
-            full = self._full_tokens.pop(dslot, None)
-            if full is not None and self._prefix_on:
-                # the whole prompt's KV is now resident: publish its full
-                # blocks (generated tokens never land in them — the first
-                # partial block stays private by the // floor)
-                nfull = min(len(full) // self.block_size,
-                            int(self.pager.n_alloc[dslot]))
-                if nfull:
-                    self.prefix.register(
-                        full, self.pager.table[dslot, :nfull].tolist())
+            self._maybe_register_prefix(dslot)
             events.append(SlotEvent(
                 slot=dslot,
-                token=int(tok[0]) if self.lanes == 1 else tok))
+                logits=arr[0] if self.lanes == 1 else arr))
         return events
 
+    def _maybe_register_prefix(self, slot: int) -> None:
+        full = self._full_tokens.pop(slot, None)
+        if full is not None and self._prefix_on:
+            # the whole prompt's KV is now resident: publish its full
+            # blocks (generated tokens never land in them — the first
+            # partial block stays private by the // floor)
+            nfull = min(len(full) // self.block_size,
+                        int(self.pager.n_alloc[slot]))
+            if nfull:
+                self.prefix.register(
+                    full, self.pager.table[slot, :nfull].tolist())
+
+    # --------------------------- speculative decode ------------------- #
+    def verify_step(self, feeds: Dict[int, np.ndarray]) -> List[SlotEvent]:
+        """Teacher-force each slot's ``[t_last, d_1..d_{n-1}]`` through the
+        tick protocol and return per-slot logits ``[n, V]``.
+
+        Draft tokens are fed one per turn exactly like prompt tokens, so a
+        verify of n tokens costs n ring turns for that slot — pipeline spec
+        decode trades no kernel time but keeps the scheduler's draft/verify
+        protocol uniform across backends.  Slots still in their prompt
+        phase keep teacher-forcing during these ticks; a prompt that
+        completes mid-verify emits a ``[1, V]`` event (its first sampled
+        token's logits), which the caller accepts with count=1.
+
+        The caller MUST follow with :meth:`accept` before the next quantum.
+        """
+        assert self._spec_ok, "spec decode needs paged caches + lanes == 1"
+        assert not self._pending, "accept() the previous verify first"
+        feeds = {int(s): np.asarray(t, np.int32).ravel()
+                 for s, t in feeds.items()}
+        for s, toks in feeds.items():
+            assert s in self._prompts and len(toks) >= 1, s
+            assert self._rounds[s] >= len(self._prompts[s]), \
+                f"slot {s} still in prompt phase"
+            assert self._base.get(s, 0) + self._rounds[s] + len(toks) \
+                <= self.max_len, "verify feed overruns max_len"
+        # atomic block growth for every candidate position, before any
+        # bookkeeping: a rejected tail's blocks stay allocated (harmless,
+        # reused by subsequent decode or released with the slot)
+        need = sum(self.pager.blocks_needed(
+            s, self._base.get(s, 0) + self._rounds[s] + len(t) - 1)
+            for s, t in feeds.items())
+        if need > self.pager.free_blocks:
+            raise PoolExhausted(needed=need, free=self.pager.free_blocks)
+        for s, toks in feeds.items():
+            if self.pager.ensure(
+                    s, self._base.get(s, 0) + self._rounds[s] + len(toks) - 1):
+                self._bt_dirty = True
+
+        r0 = {s: self._rounds[s] for s in feeds}
+        fed = {s: 0 for s in feeds}
+        collect: Dict[int, List[np.ndarray]] = {s: [] for s in feeds}
+        events: List[SlotEvent] = []
+        guard = 0
+        total = sum(len(t) for t in feeds.values())
+        max_ticks = (total + self._m + self.spec.n_stages) * self._m + 8
+        # empty feeds (all slots still prefilling) runs exactly one tick,
+        # matching decode_step's quantum granularity
+        while (any(len(collect[s]) < len(feeds[s]) for s in feeds)
+               if feeds else guard == 0):
+            guard += 1
+            assert guard <= max_ticks, "verify tick loop failed to converge"
+            slot = self._tick % self._m
+            feed_tok: Optional[np.ndarray] = None
+            if slot in feeds and fed[slot] < len(feeds[slot]):
+                feed_tok = np.full(self.lanes, feeds[slot][fed[slot]],
+                                   np.int32)
+                self._vflight[self._tick] = (slot, fed[slot],
+                                             self._epoch.get(slot, 0))
+                fed[slot] += 1
+                self._rounds[slot] += 1
+            else:
+                # prompt-phase slots keep teacher-forcing on spare turns;
+                # a slot short on blocks stalls (no raise mid-verify — it
+                # retries once the pool drains)
+                p = self._feed_for(slot, {})
+                if p is not None and self._rounds[slot] < len(
+                        self._prompts.get(slot, ())):
+                    pos = self._base.get(slot, 0) + self._rounds[slot]
+                    if self.pager.blocks_needed(slot, pos) \
+                            <= self.pager.free_blocks:
+                        if self.pager.ensure(slot, pos):
+                            self._bt_dirty = True
+                        feed_tok = p
+                        self._inflight[self._tick] = (
+                            slot, self._rounds[slot],
+                            self._epoch.get(slot, 0))
+                        self._rounds[slot] += 1
+            valid = feed_tok is not None
+            if not valid:
+                feed_tok = np.zeros(self.lanes, np.int32)
+            if self._bt_dirty:
+                self._bt_dev = jnp.asarray(self.pager.table)
+                self._bt_dirty = False
+            with self.mesh:
+                self.state = self._tick_fn(self.stage_params, self.mask,
+                                           self.state, jnp.asarray(feed_tok),
+                                           jnp.asarray(valid), self._bt_dev)
+            done_tick = self._tick - (self.spec.n_stages - 1)
+            self._tick += 1
+            vdone = self._vflight.pop(done_tick, None)
+            if vdone is not None:
+                dslot, idx, epoch = vdone
+                # verify slots cannot be freed mid-verify (free_slot is a
+                # scheduler call, never issued inside this loop)
+                assert epoch == self._epoch.get(dslot, 0), dslot
+                assert idx == len(collect[dslot]), (idx, dslot)
+                collect[dslot].append(
+                    np.asarray(self.state.logits_out[dslot][0], np.float32))
+                continue
+            pdone = self._inflight.pop(done_tick, None)
+            if pdone is not None:
+                dslot, r, epoch = pdone
+                if dslot in self._prompts \
+                        and epoch == self._epoch.get(dslot, 0) \
+                        and self._stream_done.get(dslot, True) \
+                        and r >= len(self._prompts[dslot]) - 1:
+                    arr = np.asarray(self.state.logits_out[dslot],
+                                     np.float32)          # [lanes, V]
+                    self._gen_ready[dslot] += 1
+                    self._maybe_register_prefix(dslot)
+                    self._pending[dslot] = (self._rounds[dslot], 1, "first")
+                    events.append(SlotEvent(slot=dslot, logits=arr[:1]))
+        for s in feeds:
+            self._pending[s] = (r0[s], len(feeds[s]), "verify")
+            events.append(SlotEvent(slot=s,
+                                    logits=np.stack(collect[s])))
+        return events
+
+    def accept(self, counts: Dict[int, int]) -> None:
+        """Commit per-slot accepted counts from the last ``verify_step``:
+        roll rejected draft positions out of every stage's pool and rewind
+        the feed round so the next quantum resumes at the accept point."""
+        counts = {int(s): int(e) for s, e in counts.items()}
+        assert set(counts) == set(self._pending), \
+            (sorted(counts), sorted(self._pending))
+        for s, e in counts.items():
+            r0, n, kind = self._pending[s]
+            assert 1 <= e <= n, (s, e, n)
+            if kind == "first":
+                continue                     # prompt completion: nothing fed
+            self._rounds[s] = r0 + e
+            self._gen_ready[s] += e
+            if e < n and s in self._prompts:
+                new_pos = self._base.get(s, 0) + r0 + e
+                with self.mesh:
+                    self.state = self._rollback_fn(
+                        self.state, jnp.asarray(s), jnp.int32(new_pos))
+        self._pending.clear()
+
     def free_slot(self, slot: int) -> None:
+        self._pending.pop(slot, None)
         self._prompts.pop(slot, None)
         self._rounds.pop(slot, None)
         self._gen_ready.pop(slot, None)

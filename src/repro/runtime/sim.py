@@ -25,7 +25,7 @@ run and a single-backend baseline.  Timing comes from
 from __future__ import annotations
 
 import zlib
-from typing import Dict, List, Literal, Optional, Sequence
+from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -90,6 +90,7 @@ class SimBackend(InferenceBackend):
         # second through one full decode pass of the stage chain
         step_t = float(np.sum(costs.decode) + np.sum(costs.comm_decode)
                        + costs.return_comm)
+        self._pending: Dict[int, Tuple[int, List[int]]] = {}
         self._info = BackendInfo(
             n_slots=n_slots, max_len=max_len, samples_in_backend=True,
             cache_layout=cache_layout,
@@ -98,6 +99,7 @@ class SimBackend(InferenceBackend):
             free_blocks=self.pager.total_blocks if self.pager else 0,
             max_ctx_blocks=self.pager.max_ctx_blocks if self.pager else 0,
             prefix_caching=self._prefix_on, supports_extend=True,
+            spec_decode=True,
             tokens_per_s=mb_batch / max(step_t, 1e-12))
 
     @property
@@ -248,9 +250,68 @@ class SimBackend(InferenceBackend):
             out.append(self._emit(slot))
         return out
 
+    # ----------------------- speculative verify ----------------------- #
+    def verify_step(self, feeds: Dict[int, np.ndarray]) -> List[SlotEvent]:
+        """Score each slot's fed tokens in ONE pass through the stage chain
+        — the cost model's expression of the verify amortization: n fed
+        tokens cost one decode round instead of n.  Computation is
+        non-mutating (the g-chain is derived from a scratch copy of the
+        history); :meth:`accept` commits the kept prefix."""
+        live = [s for s in sorted(feeds) if self._active[s]]
+        if not live:
+            return []
+        assert not self._pending, "verify_step before accept() of the last"
+        fed = {s: np.asarray(feeds[s], np.int32).ravel() for s in live}
+        assert all(len(f) >= 1 for f in fed.values())
+        if self.pager is not None:
+            need = sum(max(self.pager.blocks_for_len(
+                self._plen[s] + self._fed[s] + len(fed[s]))
+                - int(self.pager.n_alloc[s]), 0) for s in live)
+            if need > self.pager.free_blocks:   # raise BEFORE any mutation
+                raise PoolExhausted(needed=need,
+                                    free=self.pager.free_blocks)
+            for s in live:
+                self.pager.ensure(
+                    s, self._plen[s] + self._fed[s] + len(fed[s]) - 1)
+        if self.schedule == "bubbles":
+            barrier = max(self._ready[s] for s in live)
+            for s in live:
+                self._ready[s] = barrier
+        out = []
+        for s in live:
+            self._run_through_stages(s, prefill=False)
+            hist = list(self._hist[s])
+            g: List[int] = []
+            for i in range(len(fed[s])):
+                if i:
+                    # fed token i is draft d_i; its key joins the history
+                    # the (i+1)-th output conditions on
+                    hist.append(int(fed[s][i]))
+                tok = (zlib.crc32(np.asarray(hist, np.int32).tobytes())
+                       ^ self._seed) % self._vocab
+                g.append(int(tok))
+            self._pending[s] = (len(fed[s]), g)
+            out.append(SlotEvent(slot=s, tokens=np.asarray(g, np.int32)))
+        return out
+
+    def accept(self, counts: Dict[int, int]) -> None:
+        pend, self._pending = self._pending, {}
+        assert set(counts) == set(pend), (sorted(counts), sorted(pend))
+        for s, e in counts.items():
+            n, g = pend[s]
+            e = int(e)
+            assert 0 <= e <= n, (s, e, n)
+            # the scheduler only emits g[i] when draft i+1 matched g[i], so
+            # appending the emitted prefix reproduces the sequential stream
+            self._hist[s].extend(g[:e])
+            self._seen[s] += e
+            self._fed[s] += e
+            self.tokens_done += e * self.mb_batch
+
     def free_slot(self, slot: int) -> None:
         self._active[slot] = False
         self._stream_tokens.pop(slot, None)
+        self._pending.pop(slot, None)
         if self.pager is not None:
             self.pager.release(slot)
 

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.models import kvcache as KV
 from repro.models import transformer as T
+from repro.models.attention import effective_decode_impl
 from repro.models.config import ModelConfig
 from repro.runtime.base import (BackendInfo, InferenceBackend, PoolExhausted,
                                 SlotEvent, SlotPager)
@@ -137,6 +138,10 @@ class TensorBackend(InferenceBackend):
                     T.extend_step, cfg, impl=impl), donate_argnums=(2,))
                 self._reset_stream_fn = jax.jit(self._reset_stream,
                                                 donate_argnums=(0,))
+                self._verify_fn = jax.jit(functools.partial(
+                    T.verify_step, cfg, impl=impl), donate_argnums=(2,))
+                self._rollback_fn = jax.jit(self._rollback,
+                                            donate_argnums=(0,))
         else:
             def _decode(params, tokens, caches):
                 logits, new = jax.vmap(
@@ -146,6 +151,11 @@ class TensorBackend(InferenceBackend):
                 return logits[:, 0], new
             self._decode_fn = jax.jit(_decode)
             self._scatter_fn = jax.jit(self._scatter, donate_argnums=(0,))
+
+        # speculative verify shares extend's preconditions: paged layout
+        # with ring slot == position, so rejected drafts roll back exactly
+        self._spec_ok = self._extend_ok
+        self._pending: Dict[int, int] = {}     # slot -> fed len, last verify
 
         # host mirrors for paged allocation (decode position per slot)
         self._pos = np.zeros(n_slots, np.int64)
@@ -165,7 +175,10 @@ class TensorBackend(InferenceBackend):
             if cache_layout == "paged" else 0,
             max_ctx_blocks=nbs if cache_layout == "paged" else 0,
             prefix_caching=self._prefix_on,
-            supports_extend=self._extend_ok)
+            supports_extend=self._extend_ok,
+            attn_impl=effective_decode_impl(impl, cfg)
+            if self._paged_exec else impl,
+            spec_decode=self._spec_ok)
 
     @property
     def info(self) -> BackendInfo:
@@ -311,6 +324,105 @@ class TensorBackend(InferenceBackend):
         if "tail" in out:
             out["tail"] = {k: fix(v, False) for k, v in out["tail"].items()}
         return out
+
+    def _rollback(self, caches: PyTree, new_pos: jax.Array,
+                  mask: jax.Array) -> PyTree:
+        """Batched verify rollback: for every masked slot, mark positions
+        below ``new_pos[s]`` valid and everything above empty, and rewind
+        ``pos``.  Valid because the spec gate guarantees ring slot ==
+        position (no wrap), so position identity IS slot identity — a
+        rejected draft's key can be invalidated without touching any
+        surviving key."""
+        def fix(entry, stacked):
+            if not KV.is_paged_attn_cache(entry):
+                return entry
+            e = dict(entry)
+            c_pad = entry["key_pos"].shape[-1]
+            iota = jnp.arange(c_pad, dtype=jnp.int32)[None, :]
+            row = jnp.where(iota < new_pos[:, None], iota, -1)   # [B, C]
+            if stacked:
+                e["key_pos"] = jnp.where(mask[None, :, None], row[None],
+                                         entry["key_pos"])
+                e["pos"] = jnp.where(mask[None, :],
+                                     new_pos[None].astype(entry["pos"].dtype),
+                                     entry["pos"])
+            else:
+                e["key_pos"] = jnp.where(mask[:, None], row,
+                                         entry["key_pos"])
+                e["pos"] = jnp.where(mask, new_pos.astype(entry["pos"].dtype),
+                                     entry["pos"])
+            return e
+
+        out = dict(caches)
+        if "stack" in out:
+            out["stack"] = {k: fix(v, True) for k, v in out["stack"].items()}
+        if "tail" in out:
+            out["tail"] = {k: fix(v, False) for k, v in out["tail"].items()}
+        return out
+
+    # ------------------------------------------------------------------ #
+    # speculative verify: K fed tokens per slot, one forward pass
+    # ------------------------------------------------------------------ #
+    def verify_step(self, feeds: Dict[int, np.ndarray]) -> List[SlotEvent]:
+        if not feeds:
+            return []
+        assert self._spec_ok, "backend does not advertise spec_decode"
+        assert not self._pending, "verify_step before accept() of the last"
+        fed = {s: np.asarray(f, np.int32).ravel() for s, f in feeds.items()}
+        kq = max(len(f) for f in fed.values())
+        assert kq >= 1 and all(len(f) >= 1 for f in fed.values())
+        tokens = np.zeros((self.n_slots, kq), np.int32)
+        lens = np.zeros(self.n_slots, np.int32)
+        live = [s for s in sorted(fed) if self._active[s]]
+        for s in live:
+            assert int(self._pos[s]) + len(fed[s]) <= self.max_len, \
+                (s, int(self._pos[s]), len(fed[s]), self.max_len)
+            tokens[s, :len(fed[s])] = fed[s]
+            lens[s] = len(fed[s])
+        # atomic growth: blocks for ALL candidate positions up front (a
+        # rejected tail leaves its blocks allocated — they back the very
+        # next tokens anyway), raising before any state mutates
+        need = sum(
+            max(self.pager.blocks_for_len(int(self._pos[s] + lens[s]))
+                - int(self.pager.n_alloc[s]), 0) for s in live)
+        if need > self.pager.free_blocks:
+            raise PoolExhausted(needed=need, free=self.pager.free_blocks)
+        changed = False
+        for s in live:
+            changed |= self.pager.ensure(s, int(self._pos[s] + lens[s]) - 1)
+        if changed:
+            self._push_tables()
+        with use_mesh(self.mesh):
+            logits, self.caches = self._verify_fn(
+                self.params, jnp.asarray(tokens), self.caches,
+                jnp.asarray(lens))
+        logits = np.asarray(logits, np.float32)
+        # host _pos stays at the pre-verify position until accept() commits
+        self._pending = {s: int(lens[s]) for s in live}
+        return [SlotEvent(slot=s, logits=logits[s, :int(lens[s])])
+                for s in live]
+
+    def accept(self, counts: Dict[int, int]) -> None:
+        pend, self._pending = self._pending, {}
+        assert set(counts) == set(pend), (sorted(counts), sorted(pend))
+        new_pos = np.asarray(self._pos, np.int64).copy()
+        mask = np.zeros(self.n_slots, bool)
+        partial = False
+        for s, e in counts.items():
+            e = int(e)
+            assert 0 <= e <= pend[s], (s, e, pend[s])
+            mask[s] = True
+            new_pos[s] = self._pos[s] + e
+            partial |= e < pend[s]
+        if partial:
+            # rewind rejected draft keys; full acceptance leaves the device
+            # state exactly right already (pos advanced by lens in verify)
+            with use_mesh(self.mesh):
+                self.caches = self._rollback_fn(
+                    self.caches, jnp.asarray(new_pos, jnp.int32),
+                    jnp.asarray(mask))
+        for s in counts:
+            self._pos[s] = int(new_pos[s])
 
     # ------------------------------------------------------------------ #
     # streamed admission: prefix adoption + chunked/offset prefill

@@ -4,6 +4,8 @@ from repro.serving.scheduler import (ContinuousBatcher, IncompleteServeError,
 from repro.serving.sched import (EDFPolicy, FIFOPolicy, Fleet, PriorityPolicy,
                                  SchedPolicy, bursty_trace, make_policy,
                                  poisson_trace, replay)
+from repro.serving.spec import (CallableDraft, DraftSource, NGramDraft,
+                                OracleDraft, make_draft)
 from repro.serving.types import (Request, RequestOutput, RequestTiming,
                                  SamplingParams, TokenEvent)
 
@@ -13,13 +15,19 @@ __all__ = [
     "IncompleteServeError", "ServeEngine", "sample_logits",
     "SchedPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
     "make_policy", "Fleet", "poisson_trace", "bursty_trace", "replay",
+    "DraftSource", "NGramDraft", "OracleDraft", "CallableDraft",
+    "make_draft",
 ]
 
 
 def __getattr__(name):
-    # the jax-heavy engine imports lazily so planner/benchmark code can use
-    # the facade over SimBackend without touching jax (mirrors repro.runtime)
-    if name in ("ServeEngine", "sample_logits"):
-        from repro.serving import engine
-        return getattr(engine, name)
+    # the jax-heavy engine/sampling modules import lazily so planner and
+    # benchmark code can use the facade over SimBackend without touching jax
+    # (mirrors repro.runtime)
+    if name == "sample_logits":
+        from repro.serving.sampling import sample_logits
+        return sample_logits
+    if name == "ServeEngine":
+        from repro.serving.engine import ServeEngine
+        return ServeEngine
     raise AttributeError(name)

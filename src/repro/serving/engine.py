@@ -35,22 +35,11 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.sampling import sample_logits   # noqa: F401 (back-compat)
 from repro.serving.types import Request, SamplingParams   # noqa: F401 (re-export)
 from repro.sharding.rules import use_mesh
 
 PyTree = Any
-
-
-def sample_logits(key: jax.Array, logits: jax.Array,
-                  sp: SamplingParams) -> jax.Array:
-    """logits [B, V] -> tokens [B]."""
-    if sp.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / sp.temperature
-    if sp.top_k:
-        kth = jax.lax.top_k(logits, sp.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
 class ServeEngine:

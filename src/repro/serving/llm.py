@@ -64,12 +64,14 @@ class LLM:
 
     def __init__(self, backend, *, seed: int = 0, min_bucket: int = 1,
                  pad_id: int = 0, prefill_chunk: Optional[int] = None,
-                 policy=None, max_preemptions: int = 3):
+                 policy=None, max_preemptions: int = 3,
+                 spec_k: int = 0, draft="ngram"):
         self.batcher = ContinuousBatcher(backend, seed=seed,
                                          min_bucket=min_bucket, pad_id=pad_id,
                                          prefill_chunk=prefill_chunk,
                                          policy=policy,
-                                         max_preemptions=max_preemptions)
+                                         max_preemptions=max_preemptions,
+                                         spec_k=spec_k, draft=draft)
         self.backend = self.batcher.backend
         self.deployment = None          # set by from_plan
 
@@ -93,6 +95,7 @@ class LLM:
                   prefix_cache: bool = False,
                   prefill_chunk: Optional[int] = None,
                   policy=None, max_preemptions: int = 3,
+                  spec_k: int = 0, draft="ngram",
                   ) -> "LLM":
         """Plan → backend → serving in one call (the paper's Fig. 3 flow).
 
@@ -118,6 +121,13 @@ class LLM:
         default, ``"priority"``, ``"edf"`` — see ``serving.sched``); like
         the knobs above it never changes any request's tokens, only when
         they are produced.
+
+        ``spec_k=K`` (K>=2, paged backends) turns on speculative decoding:
+        each quantum verifies K tokens (the last emitted one plus K-1
+        ``draft`` proposals — ``"ngram"`` self-speculation by default) in a
+        single multi-query pass and keeps the longest prefix the model
+        itself would have produced.  Greedy outputs stay bit-identical to
+        plain decoding; unsupported backends warn and serve normally.
         """
         from repro.core.planner import plan_deployment
         from repro.core.profile import Workload
@@ -135,7 +145,8 @@ class LLM:
                                   prefix_cache=prefix_cache)
         llm = cls(backend, seed=seed, min_bucket=min_bucket, pad_id=pad_id,
                   prefill_chunk=prefill_chunk, policy=policy,
-                  max_preemptions=max_preemptions)
+                  max_preemptions=max_preemptions,
+                  spec_k=spec_k, draft=draft)
         llm.deployment = dep
         return llm
 

@@ -1,0 +1,29 @@
+"""Sampling helpers for the live serving path.
+
+Extracted from the deprecated ``serving/engine.py`` so the scheduler's
+sampling path no longer depends on a module scheduled for deletion — the
+engine re-exports :func:`sample_logits` for back-compat, but new code (and
+``serving/scheduler.py``) imports from here.
+
+jax is imported lazily by callers: this module is only pulled in when a
+request actually samples (``temperature > 0``), keeping the scheduler
+importable without jax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.types import SamplingParams
+
+
+def sample_logits(key: jax.Array, logits: jax.Array,
+                  sp: SamplingParams) -> jax.Array:
+    """logits [B, V] -> tokens [B]."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / sp.temperature
+    if sp.top_k:
+        kth = jax.lax.top_k(logits, sp.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

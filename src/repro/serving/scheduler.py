@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import heapq
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
@@ -89,10 +90,17 @@ class SchedulerStats:
     prefill_chunks: int = 0             # per-slot chunk passes (streamed)
     prefill_shapes: Dict[int, int] = field(default_factory=dict)
     # ^ bucketed prompt/chunk length -> number of admission waves at that shape
+    spec_drafted: int = 0               # draft tokens fed through verify
+    spec_accepted: int = 0              # of which the model itself produced
 
     @property
     def utilization(self) -> float:
         return self.slot_busy_steps / max(self.slot_total_steps, 1)
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of draft tokens accepted (0 when spec decode is off)."""
+        return self.spec_accepted / max(self.spec_drafted, 1)
 
     def __repr__(self):
         return (f"SchedulerStats(served={self.served}, "
@@ -115,6 +123,10 @@ class SchedulerStats:
         if self.ttft_misses or self.e2e_misses:
             s += (f", ttft_misses={self.ttft_misses}, "
                   f"e2e_misses={self.e2e_misses}")
+        if self.spec_drafted:
+            s += (f", spec_drafted={self.spec_drafted}, "
+                  f"spec_accepted={self.spec_accepted} "
+                  f"({self.spec_acceptance:.0%})")
         return s + ")"
 
 
@@ -163,8 +175,29 @@ class ContinuousBatcher:
                  on_token: Optional[Callable[[TokenEvent], None]] = None,
                  reserve_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 policy=None, max_preemptions: int = 3):
+                 policy=None, max_preemptions: int = 3,
+                 spec_k: int = 0, draft="ngram"):
         self.backend: InferenceBackend = _as_backend(backend)
+        #: speculative decoding: verify up to spec_k tokens per quantum
+        #: (1 emitted + spec_k-1 drafts).  0/1 = off.  Takes effect on
+        #: backends advertising ``spec_decode``; greedy outputs stay
+        #: bit-identical to non-speculative decoding.
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = int(spec_k)
+        self._draft = None
+        self._spec_on = False
+        if self.spec_k >= 2:
+            if self.backend.info.spec_decode:
+                from repro.serving.spec import make_draft
+                self._draft = make_draft(draft)
+                self._spec_on = True
+            else:
+                warnings.warn(
+                    f"spec_k={spec_k} requested but the backend does not "
+                    f"support speculative decoding "
+                    f"(cache_layout={self.backend.info.cache_layout!r}); "
+                    f"running plain decode", RuntimeWarning, stacklevel=2)
         self.min_bucket = min_bucket
         self.pad_id = pad_id
         self.on_token = on_token
@@ -285,7 +318,7 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.uid}: backend samples in-SPMD (greedy); "
                 f"temperature/top_k sampling needs a logits-producing "
-                f"backend (e.g. TensorBackend)")
+                f"backend (TensorBackend and PipelineBackend both are)")
         self._uids.add(req.uid)
         self._n_submitted += 1
         self._sub_seq[req.uid] = self._n_submitted
@@ -333,7 +366,7 @@ class ContinuousBatcher:
         import jax
         import jax.numpy as jnp
 
-        from repro.serving.engine import sample_logits
+        from repro.serving.sampling import sample_logits
         if self._base_key is None:
             self._base_key = jax.random.PRNGKey(self._seed)
         key = self._keys.setdefault(
@@ -534,51 +567,144 @@ class ContinuousBatcher:
         req.timing.queued_steps += waited
         self.stats.queue_wait_steps += waited
 
+    def _deliver(self, req: Request, slot: int, tok: int,
+                 out: List[TokenEvent], *,
+                 release_slot: bool = True) -> Optional[str]:
+        """Record one emitted token: timing, finish bookkeeping, feed for
+        the next quantum, and the surfaced :class:`TokenEvent`.  Returns
+        the finish reason (None while the request keeps running).
+
+        ``release_slot=False`` defers ``backend.free_slot`` to the caller —
+        the spec-decode path must ``accept()`` a verify quantum before the
+        backend may recycle any of its slots."""
+        now = time.perf_counter()
+        if not req.generated:
+            req.timing.first_token_s = now
+            req.timing.first_token_step = self.step_no
+            slo = req.params.ttft_slo
+            if slo is not None and req.timing.ttft_steps > slo:
+                self.stats.ttft_misses += 1
+        req.generated.append(tok)
+        reason = req.check_finish()
+        # finish bookkeeping happens BEFORE the event surfaces, so a
+        # finished=True event observes a consistent world: the request
+        # is already in .done with finish_reason/timing set, and
+        # poll(uid) from an on_token callback works
+        if reason is not None:
+            req.finish_reason = reason
+            req.timing.finished_s = now
+            req.timing.finish_step = self.step_no
+            slo = req.params.e2e_slo
+            if slo is not None and req.timing.e2e_steps > slo:
+                self.stats.e2e_misses += 1
+            self.done[req.uid] = req
+            self.stats.served += 1
+            self._keys.pop(req.uid, None)
+            self._admit_seq.pop(req.uid, None)
+            self._sub_seq.pop(req.uid, None)
+            if release_slot:
+                self.backend.free_slot(slot)
+            del self._slot_req[slot]
+            self._feeds.pop(slot, None)
+            self._free.append(slot)             # continuous: recycle now
+        else:
+            self._feeds[slot] = tok
+        event = TokenEvent(uid=req.uid, token=tok,
+                           index=len(req.generated) - 1,
+                           step=self.step_no,
+                           finished=reason is not None,
+                           finish_reason=reason)
+        out.append(event)
+        if self.on_token is not None:
+            self.on_token(event)
+        return reason
+
     def _handle(self, events: List[SlotEvent], out: List[TokenEvent]):
         for ev in events:
             req = self._slot_req.get(ev.slot)
             if req is None:
                 continue
-            tok = self._sample(req, ev)
-            now = time.perf_counter()
-            if not req.generated:
-                req.timing.first_token_s = now
-                req.timing.first_token_step = self.step_no
-                slo = req.params.ttft_slo
-                if slo is not None and req.timing.ttft_steps > slo:
-                    self.stats.ttft_misses += 1
-            req.generated.append(tok)
-            reason = req.check_finish()
-            # finish bookkeeping happens BEFORE the event surfaces, so a
-            # finished=True event observes a consistent world: the request
-            # is already in .done with finish_reason/timing set, and
-            # poll(uid) from an on_token callback works
-            if reason is not None:
-                req.finish_reason = reason
-                req.timing.finished_s = now
-                req.timing.finish_step = self.step_no
-                slo = req.params.e2e_slo
-                if slo is not None and req.timing.e2e_steps > slo:
-                    self.stats.e2e_misses += 1
-                self.done[req.uid] = req
-                self.stats.served += 1
-                self._keys.pop(req.uid, None)
-                self._admit_seq.pop(req.uid, None)
-                self._sub_seq.pop(req.uid, None)
-                self.backend.free_slot(ev.slot)
-                del self._slot_req[ev.slot]
-                self._feeds.pop(ev.slot, None)
-                self._free.append(ev.slot)      # continuous: recycle now
+            self._deliver(req, ev.slot, self._sample(req, ev), out)
+
+    # ------------------------------------------------------------------ #
+    # speculative decoding (draft -> verify -> accept)
+    # ------------------------------------------------------------------ #
+    def _spec_feeds(self) -> Dict[int, np.ndarray]:
+        """Per-slot verify feeds ``[t_last, d_1..d_{n-1}]``.  Slots without
+        a sampled token yet (prompt still streaming/ticking) are skipped —
+        the backend keeps teacher-forcing them inside ``verify_step``.
+        Temperature>0 requests verify n=1 (plain decode through the verify
+        path: host sampling needs exactly the next distribution)."""
+        feeds: Dict[int, np.ndarray] = {}
+        info = self.backend.info
+        for slot in sorted(self._slot_req):
+            req = self._slot_req[slot]
+            if slot not in self._feeds or slot in self._chunking:
+                continue
+            n = self.spec_k if req.params.temperature <= 0.0 else 1
+            n = min(n, req.params.max_tokens - len(req.generated))
+            plen = len(req.prompt)
+            n = max(min(n, info.max_len - (plen + len(req.generated) - 1)),
+                    1)
+            toks = [self._feeds[slot]]
+            if n > 1 and self._draft is not None:
+                ctx = np.concatenate([np.asarray(req.prompt, np.int32),
+                                      np.asarray(req.generated, np.int32)])
+                toks += self._draft.propose(req.uid, ctx,
+                                            len(req.generated), n - 1)
+            feeds[slot] = np.asarray(toks, np.int32)
+        return feeds
+
+    def _verify_outputs(self, req: Request, ev: SlotEvent) -> List[int]:
+        """Model outputs g_0..g_{n-1} from a verify event (g_i = the token
+        the model emits after seeing fed token i)."""
+        if ev.tokens is not None:               # backend pre-sampled (sim)
+            return [int(t) for t in np.asarray(ev.tokens).ravel()]
+        logits = np.asarray(ev.logits)
+        assert logits.ndim == 2, logits.shape
+        if req.params.temperature <= 0.0:
+            return [int(t) for t in np.argmax(logits, -1)]
+        assert logits.shape[0] == 1, "temperature>0 must verify n=1"
+        return [self._sample(req, SlotEvent(slot=0, logits=logits[0]))]
+
+    def _verify_quantum(self, out: List[TokenEvent]) -> None:
+        """One spec-decode quantum: draft, verify, emit the longest
+        model-matching prefix, accept (rolling rejected KV back), then
+        release any slots that finished mid-emission."""
+        feeds = self._spec_feeds()
+        events = self.backend.verify_step(feeds)
+        counts: Dict[int, int] = {}
+        finished_slots: List[int] = []
+        for ev in events:
+            req = self._slot_req.get(ev.slot)
+            if req is None:                     # defensive: still accept
+                counts[ev.slot] = 1
+                continue
+            g = self._verify_outputs(req, ev)
+            fed = feeds.get(ev.slot)
+            if fed is None:
+                emit = g[:1]    # pipeline prompt-completion: first token
             else:
-                self._feeds[ev.slot] = tok
-            event = TokenEvent(uid=req.uid, token=tok,
-                               index=len(req.generated) - 1,
-                               step=self.step_no,
-                               finished=reason is not None,
-                               finish_reason=reason)
-            out.append(event)
-            if self.on_token is not None:
-                self.on_token(event)
+                assert len(g) == len(fed), (len(g), len(fed))
+                emit = [g[0]]
+                for i in range(1, len(fed)):
+                    if int(fed[i]) == emit[-1]:
+                        emit.append(g[i])
+                    else:
+                        break
+                self.stats.spec_drafted += len(fed) - 1
+                self.stats.spec_accepted += len(emit) - 1
+            n_emitted = 0
+            for tok in emit:
+                n_emitted += 1
+                if self._deliver(req, ev.slot, tok, out,
+                                 release_slot=False) is not None:
+                    finished_slots.append(ev.slot)
+                    break
+            counts[ev.slot] = n_emitted
+        self.backend.accept(counts)
+        for slot in finished_slots:
+            self.backend.free_slot(slot)
 
     def _pump_chunks(self, out: List[TokenEvent]) -> None:
         """Feed each mid-stream slot its next prompt chunk — one chunk per
@@ -768,13 +894,18 @@ class ContinuousBatcher:
             self.stats.slot_busy_steps += len(self._slot_req)
             while True:
                 try:
-                    events = self.backend.decode_step(self._feeds)
+                    if self._spec_on:
+                        # verify_step delivers internally (variable tokens
+                        # per slot per quantum)
+                        self._verify_quantum(out)
+                    else:
+                        self._handle(self.backend.decode_step(self._feeds),
+                                     out)
                     break
                 except PoolExhausted:
                     if not self._preempt_victim():
                         raise   # a lone request outgrowing the pool is a
                                 # sizing bug submit() should have rejected
-            self._handle(events, out)
         self.stats.queued = len(self.queue)
         self.step_no += 1
         return out

@@ -224,6 +224,136 @@ def test_paged_decode_fully_masked_row_is_finite():
                                rtol=3e-5, atol=3e-5)
 
 
+# --------------------------------------------------------------------------- #
+# paged verify attention (KQ draft tokens per slot, one block-streaming pass)
+# --------------------------------------------------------------------------- #
+
+def _paged_verify_gather_ref(q, k_pool, v_pool, bt, mask, *, softcap=None):
+    """Oracle: per q row, the single-token gather reference with that
+    row's causality mask."""
+    kq = q.shape[1]
+    return jnp.stack(
+        [_paged_gather_ref(q[:, i], k_pool, v_pool, bt, mask[:, i],
+                           softcap=softcap) for i in range(kq)], axis=1)
+
+
+def _verify_case(b, kh, d, bs, nbs, kq, lens, seed, unmapped_tail=False):
+    """Pools + table where each slot holds ``lens[i] + kq - 1`` scattered
+    keys (the history plus the verify quantum's own drafts) and ``pos`` is
+    the first fed token's position, matching the runtime's scatter-then-
+    attend order."""
+    c = nbs * bs
+    assert max(lens) + kq - 1 <= c
+    ks = jax.random.split(K(seed), 3)
+    num_blocks = b * nbs + 2
+    k_pool = jax.random.normal(ks[0], (num_blocks + 1, bs, kh, d))
+    v_pool = jax.random.normal(ks[1], (num_blocks + 1, bs, kh, d))
+    rng = np.random.default_rng(seed)
+    bt = rng.permutation(num_blocks)[:b * nbs].reshape(b, nbs).astype(np.int32)
+    valid = np.asarray(lens)[:, None] + kq - 1
+    key_pos = np.where(np.arange(c)[None] < valid,
+                       np.arange(c)[None], -1).astype(np.int32)
+    if unmapped_tail:
+        bt[0, -1] = -1
+        key_pos[0, (nbs - 1) * bs:] = -1
+    pos = (np.asarray(lens) - 1).astype(np.int32)
+    return (k_pool, v_pool, jnp.asarray(bt), jnp.asarray(key_pos),
+            jnp.asarray(pos), ks[2])
+
+
+@pytest.mark.parametrize("softcap", [None, 30.0])
+@pytest.mark.parametrize("b,h,kh,d,bs,nbs,kq,lens", [
+    (2, 4, 2, 64, 16, 4, 4, (40, 25)),    # GQA, per-slot positions
+    (2, 8, 1, 32, 16, 3, 4, (15, 30)),    # MQA; row 0's drafts straddle the
+                                          # block-0/1 boundary (15-1+4 > 16)
+    (1, 2, 2, 64, 16, 2, 5, (20, )),      # kq > typical draft count
+])
+def test_paged_verify_matches_gather_ref(b, h, kh, d, bs, nbs, kq, lens,
+                                         softcap):
+    """KQ-row verify == per-row gather reference under per-row causality:
+    row i admits keys with key_pos <= pos + i (later drafts see earlier
+    drafts' freshly-scattered keys, never their own future)."""
+    k_pool, v_pool, bt, key_pos, pos, kr = _verify_case(
+        b, kh, d, bs, nbs, kq, lens, seed=30)
+    q = jax.random.normal(kr, (b, kq, h, d))
+    out = ops.paged_verify_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     softcap=softcap, interpret=True)
+    pos_i = pos[:, None, None] + jnp.arange(kq)[None, :, None]
+    mask = (key_pos[:, None, :] >= 0) & (key_pos[:, None, :] <= pos_i)
+    want = _paged_verify_gather_ref(q, k_pool, v_pool, bt, mask,
+                                    softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # per-row causality is strict: row 0 must NOT see row kq-1's keys
+    m0, mk = mask[:, 0], mask[:, kq - 1]
+    assert int(m0.sum()) < int(mk.sum())
+
+
+def test_paged_verify_unmapped_blocks_masked():
+    """An unmapped (-1) table entry reads as fully masked — the scratch
+    block's garbage never reaches a verify row's softmax."""
+    b, h, kh, d, bs, nbs, kq = 2, 4, 2, 32, 16, 3, 3
+    k_pool, v_pool, bt, key_pos, pos, kr = _verify_case(
+        b, kh, d, bs, nbs, kq, lens=(20, 10), seed=31, unmapped_tail=True)
+    q = jax.random.normal(kr, (b, kq, h, d))
+    out = ops.paged_verify_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    pos_i = pos[:, None, None] + jnp.arange(kq)[None, :, None]
+    mask = (key_pos[:, None, :] >= 0) & (key_pos[:, None, :] <= pos_i)
+    want = _paged_verify_gather_ref(q, k_pool, v_pool, bt, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # corrupting the scratch block (last pool row) must not change outputs
+    out2 = ops.paged_verify_attention(
+        q, k_pool.at[-1].set(1e6), v_pool.at[-1].set(-1e6), bt, key_pos, pos,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_paged_verify_kq1_bitexact_with_decode():
+    """A 1-token verify IS the decode kernel: identical online-softmax
+    order makes the outputs bit-identical, which is what lets the runtime
+    route plain decode through the verify path without drift."""
+    b, h, kh, d, bs, nbs = 3, 4, 2, 64, 16, 4
+    k_pool, v_pool, bt, key_pos, pos, kr = _paged_case(
+        b, kh, d, bs, nbs, num_blocks=b * nbs + 2, lens=(40, 25, 7), seed=32)
+    q = jax.random.normal(kr, (b, h, d))
+    dec = ops.paged_decode_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     interpret=True)
+    ver = ops.paged_verify_attention(q[:, None], k_pool, v_pool, bt,
+                                     key_pos, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ver[:, 0]))
+
+
+def test_paged_verify_ring_wraparound_window():
+    """Wrapped ring + sliding window: each verify row's window follows its
+    own position pos+i over non-monotonic key_pos."""
+    b, h, kh, d, bs, nbs, kq = 1, 2, 1, 32, 16, 4, 3
+    c = nbs * bs                                  # 64
+    ks = jax.random.split(K(33), 3)
+    k_pool = jax.random.normal(ks[0], (nbs + 1, bs, kh, d))
+    v_pool = jax.random.normal(ks[1], (nbs + 1, bs, kh, d))
+    q = jax.random.normal(ks[2], (b, kq, h, d))
+    bt = jnp.arange(nbs, dtype=jnp.int32)[None]
+    first = 150                                   # wrapped: slot = pos % 64
+    wrap = (first + kq - 1) % c
+    key_pos = (jnp.arange(c) + ((first + kq - 1) // c) * c
+               - jnp.where(jnp.arange(c) > wrap, c, 0)).astype(jnp.int32)[None]
+    pos = jnp.asarray([first], jnp.int32)
+    window = 40
+    out = ops.paged_verify_attention(q, k_pool, v_pool, bt, key_pos, pos,
+                                     window=window, interpret=True)
+    pos_i = pos[:, None, None] + jnp.arange(kq)[None, :, None]
+    mask = (key_pos[:, None, :] >= 0) & (key_pos[:, None, :] <= pos_i) \
+        & (key_pos[:, None, :] > pos_i - window)
+    counts = [int(mask[0, i].sum()) for i in range(kq)]
+    assert all(0 < n < c for n in counts), counts
+    want = _paged_verify_gather_ref(q, k_pool, v_pool, bt, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
 # ---- model-level: attend_decode_paged dispatch (per-slot vs shared,
 # ---- write_mask scratch isolation, impl contract)
 

@@ -205,6 +205,7 @@ def test_sim_backend_accounting_path():
 # pipeline backend (subprocess: fake XLA devices)
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.slow
 def test_pipeline_prefix_and_chunked_parity():
     run_subprocess("""
         import numpy as np, jax

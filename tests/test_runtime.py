@@ -25,6 +25,7 @@ def run_subprocess(body: str):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_tensor_pipeline_greedy_parity_under_batcher():
     """Acceptance: ContinuousBatcher over PipelineBackend (>= 2 stages,
     uneven periods-per-stage from a planner Plan) produces greedy outputs
@@ -77,6 +78,7 @@ np.testing.assert_array_equal(pipe, tens)
 """)
 
 
+@pytest.mark.slow
 def test_from_deployment_pipeline_matches_tensor():
     """planner Deployment -> running PipelineBackend in one call."""
     run_subprocess("""

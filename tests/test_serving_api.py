@@ -439,6 +439,7 @@ def test_submit_rejects_request_larger_than_pool():
 # facade over both real backends (subprocess: needs 8 XLA devices)
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.slow
 def test_llm_facade_pipeline_matches_tensor_varlen():
     """Acceptance: LLM.from_plan over the no-bubbles PipelineBackend serves
     variable-length prompts and matches LLM.from_backend(TensorBackend)
