@@ -1,0 +1,33 @@
+"""reprolint — repo-aware static analysis for the repro runtime.
+
+An AST-based lint pass whose rules encode this repo's own correctness
+invariants (jit-boundary hygiene, host-sync discipline, refcount pairing,
+no silent fallbacks, backend protocol conformance, deprecated-import
+containment).  Stdlib-only: importable and runnable without jax so it can
+gate CI before any accelerator dependency is installed.
+
+Entry points:
+
+- ``python -m reprolint src/ tests/ benchmarks/`` (alias package) or
+  ``python -m repro.analysis ...`` — the CLI.
+- :func:`check_source` — lint a source string in-process (self-tests).
+
+See ``docs/lint.md`` for the rule catalog, suppression syntax
+(``# reprolint: disable=CODE``) and the baseline workflow.
+"""
+from repro.analysis.engine import LintResult, check_source, lint_paths
+from repro.analysis.findings import Finding
+from repro.analysis.project import ModuleInfo, Project, load_protocol
+from repro.analysis.rules import RULES, rules_by_code
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "ModuleInfo",
+    "Project",
+    "RULES",
+    "check_source",
+    "lint_paths",
+    "load_protocol",
+    "rules_by_code",
+]

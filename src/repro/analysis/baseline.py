@@ -1,0 +1,77 @@
+"""Baseline file: accepted findings, each with a written justification.
+
+Entries match findings on ``(code, path, scope)`` with a ``count`` so
+line drift inside a function never invalidates them, while a *new*
+finding of the same code in the same function still fails once the count
+is exceeded.  ``note`` is mandatory and non-empty — a baseline entry is
+a documented decision, not a mute button.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+Key = Tuple[str, str, str]        # (code, path, scope)
+
+
+class BaselineError(ValueError):
+    pass
+
+
+def load(path: str) -> Dict[Key, dict]:
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict) or "entries" not in data:
+        raise BaselineError(f"{path}: expected an object with 'entries'")
+    out: Dict[Key, dict] = {}
+    for i, entry in enumerate(data["entries"]):
+        missing = {"code", "path", "scope", "count", "note"} - set(entry)
+        if missing:
+            raise BaselineError(
+                f"{path}: entry {i} missing fields {sorted(missing)}")
+        if not str(entry["note"]).strip():
+            raise BaselineError(
+                f"{path}: entry {i} ({entry['code']} {entry['path']}) has "
+                "an empty note — every baselined finding needs a written "
+                "justification")
+        key = (entry["code"], entry["path"], entry["scope"])
+        if key in out:
+            raise BaselineError(f"{path}: duplicate entry for {key}")
+        out[key] = dict(entry)
+    return out
+
+
+def apply(findings: Sequence[Finding], baseline: Dict[Key, dict]
+          ) -> Tuple[List[Finding], int, List[dict]]:
+    """Split findings into (unmatched, n_baselined, unused_entries)."""
+    budget = {k: int(v["count"]) for k, v in baseline.items()}
+    unmatched: List[Finding] = []
+    baselined = 0
+    for f in findings:
+        key = (f.code, f.path, f.scope)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            baselined += 1
+        else:
+            unmatched.append(f)
+    unused = [baseline[k] for k, left in budget.items() if left > 0]
+    return unmatched, baselined, unused
+
+
+def render(findings: Sequence[Finding]) -> str:
+    """Serialize current findings as a fresh baseline (notes must then be
+    filled in by hand — loading rejects empty ones, and the placeholder
+    below is deliberately shouty)."""
+    counts: Dict[Key, int] = {}
+    order: List[Key] = []
+    for f in findings:
+        key = (f.code, f.path, f.scope)
+        if key not in counts:
+            order.append(key)
+        counts[key] = counts.get(key, 0) + 1
+    entries = [{"code": c, "path": p, "scope": s, "count": counts[(c, p, s)],
+                "note": "TODO: justify or fix (docs/lint.md)"}
+               for (c, p, s) in order]
+    return json.dumps({"version": 1, "entries": entries}, indent=2) + "\n"

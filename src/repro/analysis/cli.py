@@ -1,0 +1,113 @@
+"""``python -m reprolint`` / ``python -m repro.analysis`` entry point."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import config
+from repro.analysis.engine import lint_paths
+from repro.analysis.project import Project
+from repro.analysis.rules import RULES
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="Repo-aware static analysis for the repro runtime "
+                    "(rule catalog: docs/lint.md).")
+    ap.add_argument("paths", nargs="*", default=["src", "tests",
+                                                 "benchmarks"],
+                    help="files/directories to lint (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule codes to run (default all)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default <repo>/"
+                         f"{config.BASELINE_NAME} when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file "
+                         "(notes must then be filled in by hand) and "
+                         "exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line on success")
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES:
+            print(f"{r.code}  {r.name}: {r.summary}")
+        return 0
+
+    rules = RULES
+    if args.select:
+        want = {c.strip() for c in args.select.split(",") if c.strip()}
+        unknown = want - {r.code for r in RULES}
+        if unknown:
+            print(f"reprolint: unknown rule codes {sorted(unknown)}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in RULES if r.code in want]
+
+    project = Project.discover(args.paths)
+    result = lint_paths(args.paths, rules, project)
+    findings = list(result.errors) + list(result.findings)
+
+    bl_path = args.baseline or os.path.join(project.root,
+                                            config.BASELINE_NAME)
+    if args.write_baseline:
+        with open(bl_path, "w", encoding="utf-8") as fh:
+            fh.write(baseline_mod.render(findings))
+        print(f"reprolint: wrote {len(findings)} finding(s) to {bl_path}")
+        return 0
+
+    n_baselined = 0
+    unused: List[dict] = []
+    if not args.no_baseline and os.path.isfile(bl_path):
+        try:
+            bl = baseline_mod.load(bl_path)
+        except baseline_mod.BaselineError as exc:
+            print(f"reprolint: {exc}", file=sys.stderr)
+            return 2
+        findings, n_baselined, unused = baseline_mod.apply(findings, bl)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "suppressed": len(result.suppressed),
+            "baselined": n_baselined,
+            "unused_baseline": unused,
+            "files": result.n_files,
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        for entry in unused:
+            print(f"reprolint: warning: stale baseline entry "
+                  f"{entry['code']} {entry['path']} [{entry['scope']}] — "
+                  "finding no longer occurs; remove it", file=sys.stderr)
+        if findings:
+            print(f"\nreprolint: {len(findings)} finding(s) in "
+                  f"{result.n_files} file(s) "
+                  f"({n_baselined} baselined, "
+                  f"{len(result.suppressed)} suppressed)",
+                  file=sys.stderr)
+        elif not args.quiet:
+            print(f"reprolint: clean — {result.n_files} file(s), "
+                  f"{n_baselined} baselined, "
+                  f"{len(result.suppressed)} suppressed")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":           # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,47 @@
+"""Repo-specific knowledge the rules key off.
+
+Keeping every hard-coded name here (rather than inside rule logic) makes
+the coupling to the runtime explicit: when the runtime renames something,
+this is the one file to update.
+"""
+from __future__ import annotations
+
+#: Source of truth for the backend protocol (RL005 parses it by AST).
+BASE_RELPATH = "src/repro/runtime/base.py"
+PROTOCOL_CLASS = "InferenceBackend"
+
+#: Backends required to implement *every* protocol method, not just the
+#: abstract core — dropping e.g. ``verify_step`` from one of these is a
+#: silent capability loss the type system cannot see.
+FULL_PROTOCOL_BACKENDS = frozenset(
+    {"TensorBackend", "PipelineBackend", "SimBackend"})
+
+#: Optional capabilities that only make sense as pairs: advertising one
+#: half leaves the scheduler half-configured.
+OPTIONAL_PAIRS = (("verify_step", "accept"),
+                  ("start_stream", "prefill_chunk"))
+
+#: RL001/RL003 apply to runtime source, not tests or benchmarks.
+SRC_PREFIX = "src/repro/"
+
+#: RL002 hot-path scope: per-token code where a host sync stalls the
+#: device pipeline.
+HOT_PATH_PREFIXES = ("src/repro/runtime/",)
+HOT_PATH_FILES = frozenset({"src/repro/serving/scheduler.py"})
+HOT_FUNCTIONS = frozenset(
+    {"decode_step", "verify_step", "accept", "prefill_chunk", "step",
+     "tick"})
+
+#: RL006: the deprecated ServeEngine shim. Only these modules may name
+#: ``serving.engine`` in an import (the lazy re-export and the module
+#: itself); everything else must go through ``repro.serving``.
+ENGINE_MODULE_SUFFIX = "serving.engine"
+ENGINE_ALLOWED = frozenset(
+    {"src/repro/serving/__init__.py", "src/repro/serving/engine.py"})
+
+#: RL004: a call whose last dotted segment matches this marks an impl
+#: dispatch as validated (e.g. ``_check_decode_impl``).
+IMPL_VALIDATOR_PATTERN = r"check\w*impl"
+
+#: Default baseline filename, resolved against the repo root.
+BASELINE_NAME = "reprolint-baseline.json"

@@ -1,0 +1,138 @@
+"""File walking, suppression parsing, and rule dispatch."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set
+
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import ModuleInfo, Project
+
+_SUPP_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9_,\s]+)")
+_FILE_SUPP_RE = re.compile(r"#\s*reprolint:\s*disable-file=([A-Z0-9_,\s]+)")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".pytest_cache"}
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield os.path.abspath(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in _SKIP_DIRS
+                                 and not d.startswith("."))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.abspath(os.path.join(dirpath, fn))
+
+
+def _parse_codes(raw: str) -> Set[str]:
+    return {c.strip() for c in raw.split(",") if c.strip()}
+
+
+def suppressions(mod: ModuleInfo) -> Dict[int, Set[str]]:
+    """Map line number -> suppressed codes.
+
+    A trailing ``# reprolint: disable=RL00X`` applies to its own line; a
+    standalone suppression comment also applies to the next line.
+    ``# reprolint: disable-file=RL00X`` anywhere suppresses file-wide
+    (recorded under line 0).
+    """
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(mod.lines, start=1):
+        m = _FILE_SUPP_RE.search(line)
+        if m:
+            out.setdefault(0, set()).update(_parse_codes(m.group(1)))
+            continue
+        m = _SUPP_RE.search(line)
+        if not m:
+            continue
+        codes = _parse_codes(m.group(1))
+        out.setdefault(i, set()).update(codes)
+        if line.lstrip().startswith("#"):      # standalone comment
+            out.setdefault(i + 1, set()).update(codes)
+    return out
+
+
+def is_suppressed(f: Finding, supp: Dict[int, Set[str]]) -> bool:
+    return (f.code in supp.get(0, ()) or f.code in supp.get(f.line, ()))
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]          # live (not suppressed) findings
+    suppressed: List[Finding]
+    errors: List[Finding]            # parse failures (code RL000)
+    n_files: int
+
+    @property
+    def all_clear(self) -> bool:
+        return not self.findings and not self.errors
+
+
+def lint_module(mod: ModuleInfo, rules: Sequence[Rule],
+                project: Project) -> LintResult:
+    supp = suppressions(mod)
+    live: List[Finding] = []
+    shushed: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(mod, project):
+            (shushed if is_suppressed(f, supp) else live).append(f)
+    live.sort(key=lambda f: (f.line, f.col, f.code))
+    return LintResult(findings=live, suppressed=shushed, errors=[],
+                      n_files=1)
+
+
+def lint_paths(paths: Sequence[str], rules: Sequence[Rule],
+               project: Optional[Project] = None) -> LintResult:
+    project = project or Project.discover(paths)
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    errors: List[Finding] = []
+    n = 0
+    for path in iter_py_files(paths):
+        n += 1
+        rel = os.path.relpath(path, project.root).replace(os.sep, "/")
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                source = fh.read()
+            mod = ModuleInfo(path, rel, source)
+        except (SyntaxError, UnicodeDecodeError, OSError) as exc:
+            errors.append(Finding(
+                code="RL000", message=f"cannot analyze: {exc}", path=rel,
+                line=getattr(exc, "lineno", None) or 1, col=0,
+                scope="<module>"))
+            continue
+        res = lint_module(mod, rules, project)
+        findings.extend(res.findings)
+        suppressed.extend(res.suppressed)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return LintResult(findings=findings, suppressed=suppressed,
+                      errors=errors, n_files=n)
+
+
+def check_source(source: str, *, relpath: str = "src/repro/_fixture_.py",
+                 rules: Optional[Sequence[Rule]] = None,
+                 project: Optional[Project] = None) -> List[Finding]:
+    """Lint a source string (test/fixture entry point). Suppression
+    comments in the source are honored, mirroring the CLI."""
+    if rules is None:
+        from repro.analysis.rules import RULES
+        rules = RULES
+    if project is None:
+        project = Project(root=os.getcwd(), protocol=None)
+    mod = ModuleInfo(path=relpath, relpath=relpath, source=source)
+    return lint_module(mod, rules, project).findings
+
+
+def parse_ok(source: str) -> bool:
+    try:
+        ast.parse(source)
+        return True
+    except SyntaxError:
+        return False

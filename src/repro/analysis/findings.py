@@ -1,0 +1,62 @@
+"""Finding record and the rule base class."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import TYPE_CHECKING, Iterator
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard for type hints
+    from repro.analysis.project import ModuleInfo, Project
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation.
+
+    ``scope`` is the dotted name of the enclosing class/function (or
+    ``<module>``); the baseline matches on ``(code, path, scope)`` so
+    unrelated line drift does not invalidate entries.
+    """
+
+    code: str
+    message: str
+    path: str          # repo-root-relative, posix separators
+    line: int
+    col: int
+    scope: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}"
+
+    def render(self) -> str:
+        return f"{self.location()}: {self.code} {self.message} [{self.scope}]"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base class for lint rules.
+
+    Subclasses set ``code``/``name``/``summary`` and implement
+    :meth:`check`, yielding :class:`Finding` objects for one module.
+    Rules must be pure functions of ``(module, project)`` — no
+    filesystem or process state — so fixture self-tests can drive them
+    on synthetic sources.
+    """
+
+    code: str = "RL000"
+    name: str = "abstract"
+    summary: str = ""
+
+    def check(self, mod: "ModuleInfo",
+              project: "Project") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    # helper shared by every rule
+    def finding(self, mod: "ModuleInfo", node: ast.AST,
+                message: str) -> Finding:
+        return Finding(code=self.code, message=message, path=mod.relpath,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0),
+                       scope=mod.scope_of(node))

@@ -1,0 +1,277 @@
+"""AST plumbing shared by all rules: parsed modules and repo context."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import config
+
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def dotted(node: Optional[ast.AST]) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None.
+
+    Chains through subscripts/calls are cut (the inner pieces are still
+    visited by ``ast.walk``, so prefix matching on the inner chain works).
+    """
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def last_segment(name: Optional[str]) -> str:
+    return "" if not name else name.rsplit(".", 1)[-1]
+
+
+def mentions(node: ast.AST, names: Set[str]) -> Optional[str]:
+    """First dotted name under ``node`` that is in ``names`` (else None)."""
+    if not names:
+        return None
+    for sub in ast.walk(node):
+        d = dotted(sub)
+        if d is not None and d in names:
+            return d
+    return None
+
+
+def const_str_set(node: Optional[ast.AST]) -> Set[str]:
+    """String constants in a str / tuple / list keyword value."""
+    out: Set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.add(elt.value)
+    return out
+
+
+def const_int_set(node: Optional[ast.AST]) -> Set[int]:
+    """Int constants in an int / tuple / list keyword value."""
+    out: Set[int] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.add(elt.value)
+    return out
+
+
+def assign_target_names(stmt: ast.stmt) -> Set[str]:
+    """Dotted names (re)bound by an assignment statement."""
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    out: Set[str] = set()
+    stack = list(targets)
+    while stack:
+        t = stack.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        elif isinstance(t, ast.Starred):
+            stack.append(t.value)
+        else:
+            d = dotted(t)
+            if d is not None:
+                out.add(d)
+    return out
+
+
+class ModuleInfo:
+    """One parsed source file plus parent links and scope lookup."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    # ------------------------------------------------------------------ #
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(
+            self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, ast.ClassDef):
+                return anc
+        return None
+
+    def enclosing_statement(self, node: ast.AST) -> ast.stmt:
+        cur: ast.AST = node
+        while not isinstance(cur, ast.stmt):
+            nxt = self._parents.get(cur)
+            if nxt is None:
+                break
+            cur = nxt
+        return cur  # type: ignore[return-value]
+
+    def scope_of(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        if isinstance(node, _SCOPE_NODES):
+            parts.append(node.name)
+        for anc in self.ancestors(node):
+            if isinstance(anc, _SCOPE_NODES):
+                parts.append(anc.name)
+        return ".".join(reversed(parts)) if parts else "<module>"
+
+    def functions(self) -> Iterator[ast.FunctionDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node  # type: ignore[misc]
+
+    def classes(self) -> Iterator[ast.ClassDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                yield node
+
+
+# ---------------------------------------------------------------------- #
+# InferenceBackend protocol spec (RL005), parsed from base.py by AST so
+# the linter never imports runtime code (and therefore never needs jax).
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Param:
+    name: str
+    has_default: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSig:
+    name: str
+    params: Tuple[Param, ...]     # excludes self
+    is_abstract: bool
+    is_property: bool
+    #: True when the base class ships a usable body (``cached_prefix_len``
+    #: returning 0, the ``n_slots`` property) — inheriting it is fine.
+    #: False for abstract methods and optional-capability stubs that
+    #: ``raise NotImplementedError``.
+    has_default_impl: bool = False
+
+    def render(self) -> str:
+        bits = [p.name + ("=..." if p.has_default else "") for p in
+                self.params]
+        return f"{self.name}({', '.join(bits)})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSpec:
+    class_name: str
+    methods: Dict[str, MethodSig]
+
+
+def signature_of(fn: ast.FunctionDef) -> Tuple[Param, ...]:
+    args = list(fn.args.posonlyargs) + list(fn.args.args)
+    if args and args[0].arg in ("self", "cls"):
+        args = args[1:]
+    n_def = len(fn.args.defaults)
+    params = [Param(a.arg, i >= len(args) - n_def)
+              for i, a in enumerate(args)]
+    for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        params.append(Param(a.arg, d is not None))
+    return tuple(params)
+
+
+def decorator_names(fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        d = dotted(target)
+        if d:
+            out.add(last_segment(d))
+    return out
+
+
+def protocol_from_tree(tree: ast.Module,
+                       class_name: str) -> Optional[ProtocolSpec]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            methods: Dict[str, MethodSig] = {}
+            for stmt in node.body:
+                if not isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if stmt.name.startswith("_"):
+                    continue
+                decs = decorator_names(stmt)
+                abstract = "abstractmethod" in decs
+                stubbed = any(
+                    isinstance(n, ast.Raise) and last_segment(dotted(
+                        n.exc.func if isinstance(n.exc, ast.Call)
+                        else n.exc) or "") == "NotImplementedError"
+                    for n in ast.walk(stmt))
+                methods[stmt.name] = MethodSig(
+                    name=stmt.name,
+                    params=signature_of(stmt),
+                    is_abstract=abstract,
+                    is_property="property" in decs,
+                    has_default_impl=not (abstract or stubbed))
+            return ProtocolSpec(class_name=class_name, methods=methods)
+    return None
+
+
+def load_protocol(root: str) -> Optional[ProtocolSpec]:
+    base = os.path.join(root, *config.BASE_RELPATH.split("/"))
+    if not os.path.isfile(base):
+        return None
+    with open(base, "r", encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=base)
+    return protocol_from_tree(tree, config.PROTOCOL_CLASS)
+
+
+@dataclasses.dataclass
+class Project:
+    """Repo-level context handed to every rule."""
+
+    root: str
+    protocol: Optional[ProtocolSpec] = None
+
+    @classmethod
+    def discover(cls, start_paths: Sequence[str]) -> "Project":
+        """Locate the repo root (the dir holding ``src/repro/runtime/
+        base.py``) from the cwd or any analyzed path's ancestors."""
+        candidates: List[str] = [os.getcwd()]
+        for p in start_paths:
+            cur = os.path.abspath(p)
+            if os.path.isfile(cur):
+                cur = os.path.dirname(cur)
+            while True:
+                candidates.append(cur)
+                nxt = os.path.dirname(cur)
+                if nxt == cur:
+                    break
+                cur = nxt
+        for cand in candidates:
+            marker = os.path.join(cand, *config.BASE_RELPATH.split("/"))
+            if os.path.isfile(marker):
+                return cls(root=cand, protocol=load_protocol(cand))
+        return cls(root=os.getcwd(), protocol=None)

@@ -1,0 +1,26 @@
+"""Rule registry. Adding a rule = write a module here, list it below."""
+from typing import Dict, List
+
+from repro.analysis.findings import Rule
+from repro.analysis.rules.rl001_jit import JitBoundaryHygiene
+from repro.analysis.rules.rl002_hostsync import HostSyncInHotPath
+from repro.analysis.rules.rl003_refcount import RefcountDiscipline
+from repro.analysis.rules.rl004_fallbacks import NoSilentFallbacks
+from repro.analysis.rules.rl005_protocol import ProtocolConformance
+from repro.analysis.rules.rl006_imports import DeprecatedImportLeak
+
+RULES: List[Rule] = [
+    JitBoundaryHygiene(),
+    HostSyncInHotPath(),
+    RefcountDiscipline(),
+    NoSilentFallbacks(),
+    ProtocolConformance(),
+    DeprecatedImportLeak(),
+]
+
+
+def rules_by_code() -> Dict[str, Rule]:
+    return {r.code: r for r in RULES}
+
+
+__all__ = ["RULES", "Rule", "rules_by_code"]

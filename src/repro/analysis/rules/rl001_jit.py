@@ -1,0 +1,264 @@
+"""RL001 — jit-boundary hygiene.
+
+Two failure modes this repo has actually hit at the ``jax.jit`` seam:
+
+1. **Missing statics**: a jitted function taking a non-array parameter
+   (str/bool default or annotation) that is not declared in
+   ``static_argnames``/``static_argnums`` traces it as an array — a
+   TypeError at best, a silently wrong trace cache at worst.
+2. **Donation use-after-free**: an argument position listed in
+   ``donate_argnums`` hands its buffer to XLA; reading the donated
+   reference after the call observes freed memory.  The sanctioned
+   pattern (everywhere in ``tensor.py``/``pipeline_backend.py``) rebinds
+   the donated name from the call result in the same statement.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import (ModuleInfo, Project, assign_target_names,
+                                    const_int_set, const_str_set, dotted)
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted(node) in ("jax.jit", "jit")
+
+
+def _partial_of_jit(call: ast.Call) -> bool:
+    return (dotted(call.func) in ("functools.partial", "partial")
+            and bool(call.args) and _is_jax_jit(call.args[0]))
+
+
+def _declared_statics(call: ast.Call) -> Tuple[Set[str], Set[int], bool]:
+    """(static names, static positions, any_declaration_present)."""
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    declared = False
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names |= const_str_set(kw.value)
+            declared = True
+        elif kw.arg == "static_argnums":
+            nums |= const_int_set(kw.value)
+            declared = True
+    return names, nums, declared
+
+
+def _donated(call: ast.Call) -> Set[int]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return const_int_set(kw.value)
+    return set()
+
+
+def _static_reason(arg: ast.arg,
+                   default: Optional[ast.expr]) -> Optional[str]:
+    """Why this parameter must be static, or None if array-safe."""
+    if isinstance(default, ast.Constant) and isinstance(
+            default.value, (str, bool)):
+        return f"{type(default.value).__name__} default"
+    ann = arg.annotation
+    d = dotted(ann) if ann is not None else None
+    if d in ("str", "bool"):
+        return f"{d} annotation"
+    return None
+
+
+def _params_with_defaults(
+        fn: ast.FunctionDef
+) -> List[Tuple[int, ast.arg, Optional[ast.expr], bool]]:
+    """(position, arg, default, is_kwonly) excluding self/cls."""
+    pos_args = list(fn.args.posonlyargs) + list(fn.args.args)
+    defaults: List[Optional[ast.expr]] = (
+        [None] * (len(pos_args) - len(fn.args.defaults))
+        + list(fn.args.defaults))
+    out: List[Tuple[int, ast.arg, Optional[ast.expr], bool]] = []
+    for i, (a, d) in enumerate(zip(pos_args, defaults)):
+        if i == 0 and a.arg in ("self", "cls"):
+            continue
+        out.append((i, a, d, False))
+    for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        out.append((-1, a, d, True))
+    return out
+
+
+class JitBoundaryHygiene(Rule):
+    code = "RL001"
+    name = "jit-boundary-hygiene"
+    summary = ("jax.jit sites must declare statics for non-array params; "
+               "donated args must be rebound, not read, after the call")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        if not mod.relpath.startswith(config.SRC_PREFIX):
+            return
+        defs = self._collect_defs(mod)
+        yield from self._check_statics(mod, defs)
+        yield from self._check_donation(mod)
+
+    # ------------------------------------------------------------------ #
+    def _collect_defs(self, mod: ModuleInfo) -> Dict[str, ast.FunctionDef]:
+        """Resolvable function targets: plain name for module/local defs,
+        ``self.X`` for methods (keyed per enclosing class name)."""
+        out: Dict[str, ast.FunctionDef] = {}
+        for fn in mod.functions():
+            out[fn.name] = fn
+            cls = mod.enclosing_class(fn)
+            if cls is not None and mod.parent(fn) is cls:
+                out[f"{cls.name}.self.{fn.name}"] = fn
+        return out
+
+    def _resolve_target(self, mod: ModuleInfo, site: ast.AST,
+                        target: ast.expr,
+                        defs: Dict[str, ast.FunctionDef]
+                        ) -> Tuple[Optional[ast.FunctionDef], int, Set[str]]:
+        """Resolve the function being jitted.
+
+        Returns (def, n_burned_positional, burned_kwarg_names); (None,..)
+        when the target is not statically resolvable (imported callables,
+        expression results) — those sites are skipped, not flagged.
+        """
+        if isinstance(target, ast.Call) and (
+                dotted(target.func) in ("functools.partial", "partial")):
+            inner, burned, kw = self._resolve_target(
+                mod, site, target.args[0], defs) if target.args else (
+                None, 0, set())
+            if inner is None:
+                return None, 0, set()
+            return (inner, burned + len(target.args) - 1,
+                    kw | {k.arg for k in target.keywords if k.arg})
+        d = dotted(target)
+        if d is None:
+            return None, 0, set()
+        if d in defs:
+            return defs[d], 0, set()
+        cls = mod.enclosing_class(site)
+        if cls is not None and f"{cls.name}.{d}" in defs:
+            return defs[f"{cls.name}.{d}"], 0, set()
+        return None, 0, set()
+
+    def _check_statics(self, mod: ModuleInfo,
+                       defs: Dict[str, ast.FunctionDef]
+                       ) -> Iterator[Finding]:
+        # decorator form: @functools.partial(jax.jit, ...) / @jax.jit
+        for fn in mod.functions():
+            for dec in fn.decorator_list:
+                if isinstance(dec, ast.Call) and _partial_of_jit(dec):
+                    yield from self._audit(mod, dec, fn, 0, set(),
+                                           *_declared_statics(dec))
+                elif _is_jax_jit(dec):
+                    yield from self._audit(mod, dec, fn, 0, set(),
+                                           set(), set(), False)
+        # call form: jax.jit(target, ...)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and _is_jax_jit(node.func)):
+                continue
+            if not node.args:
+                continue
+            target, burned, burned_kw = self._resolve_target(
+                mod, node, node.args[0], defs)
+            if target is None:
+                continue
+            names, nums, declared = _declared_statics(node)
+            yield from self._audit(mod, node, target, burned, burned_kw,
+                                   names, nums, declared)
+
+    def _audit(self, mod: ModuleInfo, site: ast.AST, fn: ast.FunctionDef,
+               burned: int, burned_kw: Set[str], names: Set[str],
+               nums: Set[int], declared: bool) -> Iterator[Finding]:
+        params = _params_with_defaults(fn)
+        for pos, arg, default, kwonly in params:
+            if not kwonly and pos < burned:
+                continue
+            if arg.arg in burned_kw:
+                continue
+            reason = _static_reason(arg, default)
+            if reason is None:
+                continue
+            if arg.arg in names or (not kwonly and (pos - burned) in nums):
+                continue
+            yield self.finding(
+                mod, site,
+                f"jitted function '{fn.name}' has non-array parameter "
+                f"'{arg.arg}' ({reason}) not declared in static_argnames/"
+                "static_argnums")
+        del declared  # undeclared-but-no-static-params is fine
+
+    # ------------------------------------------------------------------ #
+    def _check_donation(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for cls in mod.classes():
+            donating: Dict[str, Set[int]] = {}
+            for node in ast.walk(cls):
+                if not isinstance(node, ast.Assign):
+                    continue
+                call = node.value
+                if not (isinstance(call, ast.Call)
+                        and (_is_jax_jit(call.func)
+                             or (isinstance(call.func, ast.Call)))):
+                    continue
+                if not _is_jax_jit(call.func):
+                    continue
+                idxs = _donated(call)
+                if not idxs:
+                    continue
+                for t in node.targets:
+                    d = dotted(t)
+                    if d and d.startswith("self."):
+                        donating[d[len("self."):]] = idxs
+            if donating:
+                yield from self._audit_donation_calls(mod, cls, donating)
+
+    def _audit_donation_calls(self, mod: ModuleInfo, cls: ast.ClassDef,
+                              donating: Dict[str, Set[int]]
+                              ) -> Iterator[Finding]:
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Call):
+                continue
+            fd = dotted(node.func)
+            if fd is None or not fd.startswith("self."):
+                continue
+            attr = fd[len("self."):]
+            if attr not in donating:
+                continue
+            stmt = mod.enclosing_statement(node)
+            rebound = assign_target_names(stmt)
+            for idx in sorted(donating[attr]):
+                if idx >= len(node.args):
+                    continue
+                d = dotted(node.args[idx])
+                if d is None or d in rebound:
+                    continue
+                read_at = self._later_read(mod, node, stmt, d)
+                if read_at is not None:
+                    yield self.finding(
+                        mod, node,
+                        f"'{d}' is donated to self.{attr} "
+                        f"(donate_argnums={idx}) but read again at line "
+                        f"{read_at} — donated buffers are freed by XLA; "
+                        "rebind the name from the call result")
+
+    def _later_read(self, mod: ModuleInfo, call: ast.Call,
+                    stmt: ast.stmt, name: str) -> Optional[int]:
+        fn = mod.enclosing_function(call)
+        if fn is None:
+            return None
+        after = getattr(stmt, "end_lineno", stmt.lineno)
+        rebind_line: Optional[int] = None
+        first_read: Optional[int] = None
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.stmt) and sub.lineno > after:
+                if name in assign_target_names(sub):
+                    if rebind_line is None or sub.lineno < rebind_line:
+                        rebind_line = sub.lineno
+            d = dotted(sub)
+            if (d == name and getattr(sub, "lineno", 0) > after
+                    and isinstance(getattr(sub, "ctx", None), ast.Load)):
+                if first_read is None or sub.lineno < first_read:
+                    first_read = sub.lineno
+        if first_read is None:
+            return None
+        if rebind_line is not None and rebind_line <= first_read:
+            return None                       # rebound before the read
+        return first_read

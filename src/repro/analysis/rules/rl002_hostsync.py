@@ -1,0 +1,101 @@
+"""RL002 — host synchronization in hot paths.
+
+``decode_step``/``verify_step``/``accept``/``prefill_chunk``/``step``/
+``tick`` run once per generated token (or per scheduler quantum).  A
+device->host transfer there (``np.asarray`` on a device array,
+``.item()``, ``int()``/``float()`` coercion, ``block_until_ready``)
+serializes the device pipeline against the host and caps throughput —
+the exact regression class PR 8's pipeline logits readback documented.
+
+Device values are tracked flow-insensitively within the hot function:
+anything assigned from a ``self._*_fn(...)`` call (the repo's convention
+for prebuilt jit callables) or from a ``jax.*``/``jnp.*`` call is
+device-resident, as is anything reached through such a name.
+Protocol-boundary syncs that are intentional live in the baseline with a
+justification, not in suppressions — see ``reprolint-baseline.json``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Set
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import (ModuleInfo, Project,
+                                    assign_target_names, dotted,
+                                    last_segment, mentions)
+
+_JIT_ATTR_RE = re.compile(r"^_\w*_fn$")
+
+
+def _in_scope(relpath: str) -> bool:
+    return (relpath.startswith(config.HOT_PATH_PREFIXES)
+            or relpath in config.HOT_PATH_FILES)
+
+
+def _device_names(fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        value = node.value
+        if not isinstance(value, ast.Call):
+            continue
+        fd = dotted(value.func)
+        if fd is None:
+            continue
+        if (_JIT_ATTR_RE.match(last_segment(fd))
+                or fd.startswith(("jnp.", "jax."))):
+            out |= assign_target_names(node)
+    return out
+
+
+class HostSyncInHotPath(Rule):
+    code = "RL002"
+    name = "host-sync-in-hot-path"
+    summary = ("no .item()/int()/float()/np.asarray on device values or "
+               "block_until_ready inside decode/verify/tick paths")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        if not _in_scope(mod.relpath):
+            return
+        for fn in mod.functions():
+            if fn.name not in config.HOT_FUNCTIONS:
+                continue
+            yield from self._check_hot(mod, fn)
+
+    def _check_hot(self, mod: ModuleInfo,
+                   fn: ast.FunctionDef) -> Iterator[Finding]:
+        device = _device_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fd = dotted(node.func)
+            seg = last_segment(fd)
+            if seg == "block_until_ready":
+                yield self.finding(
+                    mod, node,
+                    f"block_until_ready in hot path '{fn.name}' stalls "
+                    "the device pipeline")
+                continue
+            hit = None
+            if fd in ("np.asarray", "numpy.asarray", "np.array",
+                      "numpy.array") and node.args:
+                hit = mentions(node.args[0], device)
+                what = fd
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "item"):
+                hit = mentions(node.func.value, device)
+                what = ".item()"
+            elif fd in ("int", "float") and node.args:
+                hit = mentions(node.args[0], device)
+                what = f"{fd}()"
+            else:
+                continue
+            if hit is not None:
+                yield self.finding(
+                    mod, node,
+                    f"{what} forces a device->host sync on '{hit}' in hot "
+                    f"path '{fn.name}' (assigned from a jit/jax call in "
+                    "this function)")

@@ -1,0 +1,147 @@
+"""RL003 — refcount and capacity-check discipline over the paged pool.
+
+Two invariants the paged KV runtime is built on (PRs 3/6/8, hand-audited
+until now):
+
+1. **Ensure-before-mutate atomicity**: a method that grows block tables
+   via ``pager.ensure(...)`` must either pre-check the whole wave against
+   ``free_blocks`` and raise ``PoolExhausted`` *before any mutation*, or
+   wrap the growth in an ``except PoolExhausted`` handler that rolls back
+   (releases/frees) or re-raises — the ``realloc_wave`` pattern.  A bare
+   mid-loop ``ensure`` can leave half a wave allocated on exhaustion.
+2. **Acquire/release pairing**: a class that takes block references
+   (``allocator.incref``, ``allocator.alloc``, ``pager.adopt``) must
+   somewhere drop them (``free``/``release``/``decref``) — a class-level
+   leak check.  (Classes that *define* the acquire method are exempt:
+   they are the mechanism, not a client.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import (ModuleInfo, Project, dotted,
+                                    last_segment)
+
+_RELEASE_ATTRS = {"free", "release", "decref", "free_slot"}
+
+
+def _receiver(call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return dotted(call.func.value) or ""
+    return ""
+
+
+def _mentions_name(node: ast.AST, name: str) -> bool:
+    for sub in ast.walk(node):
+        d = dotted(sub)
+        if d is not None and last_segment(d) == name:
+            return True
+    return False
+
+
+def _handler_catches(handler: ast.ExceptHandler, exc_name: str) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    types = t.elts if isinstance(t, ast.Tuple) else [t]
+    return any(last_segment(dotted(e) or "") == exc_name for e in types)
+
+
+class RefcountDiscipline(Rule):
+    code = "RL003"
+    name = "refcount-discipline"
+    summary = ("pager.ensure needs a free_blocks pre-check or a "
+               "PoolExhausted rollback; block acquires need a paired "
+               "release in the class")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        if not mod.relpath.startswith(config.SRC_PREFIX):
+            return
+        yield from self._check_ensure_gates(mod)
+        yield from self._check_pairing(mod)
+
+    # ------------------------------------------------------------------ #
+    def _check_ensure_gates(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for fn in mod.functions():
+            ensures = [n for n in ast.walk(fn)
+                       if isinstance(n, ast.Call)
+                       and isinstance(n.func, ast.Attribute)
+                       and n.func.attr == "ensure"
+                       and "pager" in _receiver(n)]
+            if not ensures:
+                continue
+            cls = mod.enclosing_class(fn)
+            if cls is not None and any(
+                    isinstance(s, ast.FunctionDef) and s.name == "ensure"
+                    for s in cls.body):
+                continue                  # the pager implementation itself
+            if self._has_capacity_gate(fn) or self._has_rollback(fn):
+                continue
+            yield self.finding(
+                mod, ensures[0],
+                f"'{fn.name}' calls pager.ensure without a free_blocks "
+                "pre-check or an 'except PoolExhausted' rollback — a "
+                "mid-wave exhaustion would leave a partial mutation "
+                "(ensure-before-mutate, PR 8 atomicity rule)")
+
+    def _has_capacity_gate(self, fn: ast.FunctionDef) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Compare) and (
+                    _mentions_name(node, "free_blocks")):
+                return True
+        return False
+
+    def _has_rollback(self, fn: ast.FunctionDef) -> bool:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Try):
+                continue
+            for handler in node.handlers:
+                if not _handler_catches(handler, "PoolExhausted"):
+                    continue
+                for sub in ast.walk(handler):
+                    if isinstance(sub, ast.Raise):
+                        return True
+                    if (isinstance(sub, ast.Call)
+                            and isinstance(sub.func, ast.Attribute)
+                            and sub.func.attr in _RELEASE_ATTRS):
+                        return True
+        return False
+
+    # ------------------------------------------------------------------ #
+    def _check_pairing(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for cls in mod.classes():
+            defined = {s.name for s in cls.body
+                       if isinstance(s, ast.FunctionDef)}
+            acquires: List[ast.Call] = []
+            releases = False
+            for node in ast.walk(cls):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)):
+                    continue
+                attr = node.func.attr
+                recv = _receiver(node)
+                if attr in _RELEASE_ATTRS:
+                    releases = True
+                if attr in defined:
+                    continue              # mechanism, not client
+                if (attr == "incref"
+                        or (attr == "alloc" and "alloc" in recv)
+                        or (attr == "adopt" and "pager" in recv)):
+                    acquires.append(node)
+            if acquires and not releases:
+                first = acquires[0]
+                kind = _what(first)
+                yield self.finding(
+                    mod, cls,
+                    f"class '{cls.name}' acquires block references "
+                    f"({kind} at line {first.lineno}) but never calls "
+                    "free/release/decref — refcount leak")
+
+
+def _what(call: ast.Call) -> str:
+    assert isinstance(call.func, ast.Attribute)
+    recv: Optional[str] = _receiver(call)
+    return f"{recv}.{call.func.attr}" if recv else call.func.attr

@@ -1,0 +1,113 @@
+"""RL004 — no silent fallbacks.
+
+PR 5 found ``impl=`` dispatch that silently ran the XLA path for unknown
+kernel names; PR 8 found a silent int8+pallas capability downgrade.  The
+contract since then (``DECODE_IMPLS`` in ``models/attention.py``): every
+function that branches on an ``impl`` value must validate it — call a
+``*check*impl*`` validator or raise on the unmatched branch — and nothing
+may swallow exceptions blindly (bare ``except:`` / ``except Exception:
+pass``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import (ModuleInfo, Project, dotted,
+                                    last_segment)
+
+_VALIDATOR_RE = re.compile(config.IMPL_VALIDATOR_PATTERN)
+
+
+def _is_impl_compare(node: ast.Compare) -> bool:
+    sides = [node.left] + list(node.comparators)
+    has_impl = any(isinstance(s, ast.Name) and s.id == "impl"
+                   for s in sides)
+    has_const = any(
+        (isinstance(s, ast.Constant) and isinstance(s.value, str))
+        or isinstance(s, (ast.Tuple, ast.List, ast.Set))
+        or isinstance(s, ast.Name) and s.id.isupper()   # DECODE_IMPLS
+        for s in sides if not (isinstance(s, ast.Name) and s.id == "impl"))
+    return has_impl and has_const
+
+
+class NoSilentFallbacks(Rule):
+    code = "RL004"
+    name = "no-silent-fallbacks"
+    summary = ("no bare/blindly-pass excepts; impl dispatches must "
+               "validate or raise on unknown values (DECODE_IMPLS "
+               "contract)")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        yield from self._check_excepts(mod)
+        yield from self._check_impl_dispatch(mod)
+
+    # ------------------------------------------------------------------ #
+    def _check_excepts(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.finding(
+                    mod, node,
+                    "bare 'except:' swallows everything including "
+                    "KeyboardInterrupt — catch a concrete exception")
+                continue
+            tname = last_segment(dotted(node.type) or "")
+            if tname in ("Exception", "BaseException") and all(
+                    isinstance(s, ast.Pass)
+                    or (isinstance(s, ast.Expr)
+                        and isinstance(s.value, ast.Constant))
+                    for s in node.body):
+                yield self.finding(
+                    mod, node,
+                    f"'except {tname}: pass' silently swallows all "
+                    "errors — narrow the exception or handle it "
+                    "(warn/log/re-raise)")
+
+    # ------------------------------------------------------------------ #
+    def _check_impl_dispatch(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for fn in mod.functions():
+            all_args = (list(fn.args.posonlyargs) + list(fn.args.args)
+                        + list(fn.args.kwonlyargs))
+            if not any(a.arg == "impl" for a in all_args):
+                continue
+            compares = [n for n in ast.walk(fn)
+                        if isinstance(n, ast.Compare)
+                        and _is_impl_compare(n)]
+            if not compares:
+                continue
+            if self._validates(mod, fn):
+                continue
+            yield self.finding(
+                mod, compares[0],
+                f"'{fn.name}' dispatches on 'impl' without validating it "
+                "— an unknown impl silently takes the fallback branch; "
+                "call _check_decode_impl(impl) or raise on the unmatched "
+                "case (DECODE_IMPLS contract)")
+
+    def _validates(self, mod: ModuleInfo, fn: ast.FunctionDef) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                seg = last_segment(dotted(node.func) or "")
+                if _VALIDATOR_RE.search(seg):
+                    return True
+            if isinstance(node, ast.Raise):
+                test = self._enclosing_if_test(mod, fn, node)
+                if test is not None and any(
+                        isinstance(s, ast.Name) and s.id == "impl"
+                        for s in ast.walk(test)):
+                    return True
+        return False
+
+    def _enclosing_if_test(self, mod: ModuleInfo, fn: ast.FunctionDef,
+                           node: ast.AST) -> Optional[ast.expr]:
+        for anc in mod.ancestors(node):
+            if anc is fn:
+                return None
+            if isinstance(anc, ast.If):
+                return anc.test
+        return None

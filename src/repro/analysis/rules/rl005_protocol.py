@@ -1,0 +1,115 @@
+"""RL005 — InferenceBackend protocol conformance.
+
+The scheduler feature-detects backend capabilities (``verify_step``,
+``start_stream``, ``cached_prefix_len``); a backend that drifts from the
+protocol — wrong parameter names/order, half of a capability pair, or a
+production backend silently missing a newer method — degrades without
+any test failing on that config.  The reference signatures are parsed
+from ``src/repro/runtime/base.py`` by AST (see ``project.protocol``), so
+the rule always checks against the *current* protocol, not a copy.
+
+Checks per class whose bases name ``InferenceBackend`` directly:
+
+- abstract core (``info``/``prefill``/``decode_step``/``free_slot``)
+  implemented;
+- every overridden protocol method keeps the base parameter names in
+  order (extras must be defaulted; base-defaulted params stay defaulted);
+- capability pairs complete: ``verify_step``/``accept``,
+  ``start_stream``/``prefill_chunk``;
+- the production backends (``TensorBackend``/``PipelineBackend``/
+  ``SimBackend``) implement the *full* protocol.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import (MethodSig, ModuleInfo, Project, dotted,
+                                    last_segment, signature_of)
+
+
+def _claims_backend(cls: ast.ClassDef) -> bool:
+    return any(last_segment(dotted(b) or "") == config.PROTOCOL_CLASS
+               for b in cls.bases)
+
+
+class ProtocolConformance(Rule):
+    code = "RL005"
+    name = "protocol-conformance"
+    summary = ("classes claiming InferenceBackend must implement the "
+               "current protocol with matching signatures")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        spec = project.protocol
+        if spec is None:
+            return
+        for cls in mod.classes():
+            if not _claims_backend(cls):
+                continue
+            defs: Dict[str, ast.FunctionDef] = {
+                s.name: s for s in cls.body
+                if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))}
+            for name, sig in sorted(spec.methods.items()):
+                if sig.is_abstract and name not in defs:
+                    yield self.finding(
+                        mod, cls,
+                        f"'{cls.name}' claims {config.PROTOCOL_CLASS} but "
+                        f"does not implement abstract method "
+                        f"'{sig.render()}'")
+            for name, fd in sorted(defs.items()):
+                base_sig = spec.methods.get(name)
+                if base_sig is not None and not base_sig.is_property:
+                    yield from self._check_signature(mod, cls, fd,
+                                                     base_sig)
+            for a, b in config.OPTIONAL_PAIRS:
+                if (a in defs) != (b in defs):
+                    have, miss = (a, b) if a in defs else (b, a)
+                    yield self.finding(
+                        mod, defs[have],
+                        f"'{cls.name}' implements '{have}' without its "
+                        f"protocol pair '{miss}' — the scheduler "
+                        "feature-detects them together")
+            if cls.name in config.FULL_PROTOCOL_BACKENDS:
+                for name, sig in sorted(spec.methods.items()):
+                    if sig.has_default_impl:
+                        continue      # base body is usable; inherit freely
+                    if name not in defs:
+                        yield self.finding(
+                            mod, cls,
+                            f"production backend '{cls.name}' is missing "
+                            f"protocol method '{sig.render()}' — every "
+                            "backend in FULL_PROTOCOL_BACKENDS must "
+                            "implement the complete protocol")
+
+    def _check_signature(self, mod: ModuleInfo, cls: ast.ClassDef,
+                         fd: ast.FunctionDef,
+                         base: MethodSig) -> Iterator[Finding]:
+        own = signature_of(fd)
+        has_varargs = (fd.args.vararg is not None
+                       or fd.args.kwarg is not None)
+        own_names = [p.name for p in own]
+        base_names = [p.name for p in base.params]
+        if own_names[:len(base_names)] != base_names:
+            if not (has_varargs
+                    and base_names[:len(own_names)] == own_names):
+                yield self.finding(
+                    mod, fd,
+                    f"'{cls.name}.{fd.name}' signature drifts from the "
+                    f"protocol: expected ({', '.join(base_names)}), got "
+                    f"({', '.join(own_names)})")
+                return
+        for i, bp in enumerate(base.params):
+            if i < len(own) and bp.has_default and not own[i].has_default:
+                yield self.finding(
+                    mod, fd,
+                    f"'{cls.name}.{fd.name}' makes protocol-optional "
+                    f"parameter '{bp.name}' required — callers omitting "
+                    "it would break on this backend only")
+        for p in own[len(base.params):]:
+            if not p.has_default:
+                yield self.finding(
+                    mod, fd,
+                    f"'{cls.name}.{fd.name}' adds required parameter "
+                    f"'{p.name}' beyond the protocol signature")

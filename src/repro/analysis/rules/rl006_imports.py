@@ -1,0 +1,67 @@
+"""RL006 — deprecated-import leak and mutable default arguments.
+
+``serving.engine`` (ServeEngine) is deprecated since PR 6; only the lazy
+shim in ``serving/__init__`` (and the module itself) may name it — PR 8
+found a leak that re-coupled new code to the old engine.  Mutable default
+arguments ride along here as the classic shared-state leak across calls.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import ModuleInfo, Project, dotted
+
+
+def _mutable_default(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("list", "dict", "set", "bytearray"))
+
+
+class DeprecatedImportLeak(Rule):
+    code = "RL006"
+    name = "deprecated-import-leak"
+    summary = ("only the shim may import serving.engine; no mutable "
+               "default arguments")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        yield from self._check_engine_imports(mod)
+        yield from self._check_mutable_defaults(mod)
+
+    def _check_engine_imports(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if mod.relpath in config.ENGINE_ALLOWED:
+            return
+        suffix = config.ENGINE_MODULE_SUFFIX
+        for node in ast.walk(mod.tree):
+            hit = False
+            if isinstance(node, ast.Import):
+                hit = any(a.name.endswith(suffix) for a in node.names)
+            elif isinstance(node, ast.ImportFrom):
+                module = node.module or ""
+                hit = (module.endswith(suffix)
+                       or (module.endswith("serving") or (node.level > 0
+                           and module == ""))
+                       and any(a.name == "engine" for a in node.names))
+            if hit:
+                yield self.finding(
+                    mod, node,
+                    "imports the deprecated 'serving.engine' module — "
+                    "use repro.serving.LLM (or the lazy re-export on "
+                    "repro.serving) instead")
+
+    def _check_mutable_defaults(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for fn in mod.functions():
+            defaults = list(fn.args.defaults) + [
+                d for d in fn.args.kw_defaults if d is not None]
+            for d in defaults:
+                if _mutable_default(d):
+                    yield self.finding(
+                        mod, d,
+                        f"mutable default argument in '{fn.name}' is "
+                        "shared across calls — default to None and "
+                        "construct inside")

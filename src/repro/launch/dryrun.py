@@ -311,6 +311,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             fsdp: bool = False, xent_chunk: Optional[int] = None,
             donate: bool = False, fsdp_gather: bool = False,
             impl: str = "xla", tag_suffix: str = "") -> Dict[str, Any]:
+    from repro.models.attention import _check_decode_impl
+    _check_decode_impl(impl)   # library callers bypass argparse choices
     cfg = get_config(arch, variant=variant)
     shape = SHAPES[shape_name]
     if mesh is None:

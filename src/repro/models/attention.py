@@ -53,6 +53,7 @@ def effective_decode_impl(impl: str, cfg: ModelConfig) -> str:
     surface this in ``BackendInfo.attn_impl`` so benchmarks can assert the
     kernel they think they're measuring is the one running.
     """
+    _check_decode_impl(impl)
     if impl == "pallas" and cfg.kv_dtype == "int8":
         return "xla"
     return impl
@@ -233,6 +234,7 @@ def _sdpa_chunked(cfg: ModelConfig, spec: BlockSpec, q: jax.Array,
 def attend_full(params: Dict, cfg: ModelConfig, spec: BlockSpec, x: jax.Array,
                 positions: jax.Array, impl: str = "xla") -> jax.Array:
     """Full-sequence causal attention (train / prefill)."""
+    _check_decode_impl(impl)
     q, k, v = _project_qkv(params, cfg, x, positions)
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -275,7 +277,8 @@ def prefill_cache(params: Dict, cfg: ModelConfig, spec: BlockSpec,
     The returned cache carries per-row ``key_pos [B, C]`` and ``pos [B]``
     (rows in one wave may hold different true lengths).
     """
-    b, s = x.shape[:2]
+    _check_decode_impl(impl)   # "pallas" prefills via _sdpa (flash kernel
+    b, s = x.shape[:2]         # is not wired to the cache-writing path)
     q, k, v = _project_qkv(params, cfg, x, positions)
     pos_b = positions if positions.ndim == 2 \
         else jnp.broadcast_to(positions[None], (b, s))
@@ -339,6 +342,7 @@ def extend_cache(params: Dict, cfg: ModelConfig, spec: BlockSpec,
     reference (extend is not the decode hot loop; the paged kernel is
     decode-shaped).
     """
+    _check_decode_impl(impl)
     b, s = x.shape[:2]
     q, k, v = _project_qkv(params, cfg, x, positions)
     bt, key_pos = cache["bt"], cache["key_pos"]

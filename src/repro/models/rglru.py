@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.attention import _check_decode_impl
 from repro.models.config import ModelConfig
 from repro.models.layers import ParamBuilder
 from repro.sharding.rules import logical_constraint
@@ -96,6 +97,7 @@ def apply_rglru_seq(params: Dict, cfg: ModelConfig, x: jax.Array,
     fresh start) and the recurrence uses ``a = 1, b = 0`` (identity), so
     ``h`` at every real position depends only on real tokens.
     """
+    _check_decode_impl(impl)   # impl != "pallas" runs the XLA scan
     gelu_branch = jax.nn.gelu(x @ params["w_gelu"], approximate=True)
     u = x @ params["w_rnn_in"]
     u = logical_constraint(u, "batch", None, "rnn")

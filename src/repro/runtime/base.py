@@ -25,7 +25,7 @@ import abc
 import dataclasses
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set, Union
 
 import numpy as np
 
@@ -37,7 +37,7 @@ class PoolExhausted(RuntimeError):
     the scheduler frees capacity (preempt-and-requeue the youngest request).
     """
 
-    def __init__(self, needed: int, free: int):
+    def __init__(self, needed: int, free: int) -> None:
         super().__init__(f"KV block pool exhausted: need {needed} block(s), "
                          f"{free} free")
         self.needed = needed
@@ -63,12 +63,12 @@ class BlockAllocator:
     prefix index can drop its mapping.
     """
 
-    def __init__(self, num_blocks: int):
+    def __init__(self, num_blocks: int) -> None:
         assert num_blocks >= 0
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self.refcount = np.zeros(num_blocks, np.int32)
-        self._registered: set = set()          # live blocks worth caching
+        self._registered: Set[int] = set()     # live blocks worth caching
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
         self.on_evict: Optional[Callable[[int], None]] = None
 
@@ -89,7 +89,7 @@ class BlockAllocator:
         blocks (calling ``on_evict`` for each)."""
         if n > self.free_blocks:
             raise PoolExhausted(needed=n, free=self.free_blocks)
-        out = []
+        out: List[int] = []
         for _ in range(n):
             if self._free:
                 out.append(self._free.pop())
@@ -138,7 +138,8 @@ class SlotPager:
     """
 
     def __init__(self, n_slots: int, num_blocks: int, block_size: int,
-                 max_ctx_blocks: int, table_width: Optional[int] = None):
+                 max_ctx_blocks: int,
+                 table_width: Optional[int] = None) -> None:
         assert block_size >= 1
         self.block_size = block_size
         self.max_ctx_blocks = max_ctx_blocks
@@ -211,7 +212,8 @@ class SlotPager:
         self.n_alloc[slot] = 0
         return True
 
-    def realloc_wave(self, slots: Sequence[int], n_tokens) -> None:
+    def realloc_wave(self, slots: Sequence[int],
+                     n_tokens: Union[int, Sequence[int]]) -> None:
         """Release every slot in an admission wave, then grow each table to
         cover its prompt positions — atomically: on :class:`PoolExhausted`
         the partial growth is rolled back (the wave's slots end empty,
@@ -255,7 +257,7 @@ class SlotEvent:
     token: Optional[int] = None           # pre-sampled (greedy in-SPMD)
     tokens: Optional[np.ndarray] = None   # [n] pre-sampled verify outputs
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         assert (self.logits is not None) or (self.token is not None) \
             or (self.tokens is not None)
 
@@ -320,6 +322,11 @@ class BackendInfo:
 
 class InferenceBackend(abc.ABC):
     """Slot-granular prefill/decode over a fixed model deployment."""
+
+    #: construction-time :class:`BackendInfo` snapshot; every concrete
+    #: backend assigns it in ``__init__`` and ``_live_info`` refreshes the
+    #: live counters from it on each ``info`` read.
+    _info: BackendInfo
 
     @property
     @abc.abstractmethod

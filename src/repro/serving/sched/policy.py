@@ -44,16 +44,16 @@ class SchedPolicy:
     """Base policy: FIFO admission, preempt-youngest victims, never
     preempts for the queue (the pre-SLO scheduler behavior)."""
 
-    name = "fifo"
+    name: str = "fifo"
     #: whether the policy ever evicts a running request for a queued one
     #: (pool-exhaustion preemption is always on — it is a liveness
     #: mechanism, not a policy choice)
-    preemptive = False
+    preemptive: bool = False
     #: whether admission order can differ from arrival order: False lets
     #: the batcher skip queue sorting entirely (FIFO's deque order — with
     #: preempted requests re-queued at the head — already is the policy
     #: order)
-    reorders = False
+    reorders: bool = False
 
     def admit_key(self, req: Request, sub_seq: int) -> Tuple:
         """Sort key for the queue (lower = admitted first).  ``sub_seq``
@@ -115,7 +115,7 @@ class EDFPolicy(SchedPolicy):
     preemptive = True
     reorders = True
 
-    def __init__(self, slack: int = DEFAULT_PREEMPT_SLACK):
+    def __init__(self, slack: int = DEFAULT_PREEMPT_SLACK) -> None:
         self.slack = slack
 
     def admit_key(self, req: Request, sub_seq: int) -> Tuple:

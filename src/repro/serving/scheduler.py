@@ -146,8 +146,9 @@ def _as_backend(engine_or_backend) -> InferenceBackend:
     if isinstance(engine_or_backend, InferenceBackend):
         return engine_or_backend
     # jax-heavy ServeEngine imports lazily: the scheduler itself (and the
-    # SimBackend benchmark path through it) must stay importable without jax
-    from repro.serving.engine import ServeEngine
+    # SimBackend benchmark path through it) must stay importable without
+    # jax.  This adapter is the sanctioned consumer of the deprecated shim.
+    from repro.serving.engine import ServeEngine  # reprolint: disable=RL006
     if isinstance(engine_or_backend, ServeEngine):
         from repro.runtime.tensor import TensorBackend
         eng = engine_or_backend

@@ -162,7 +162,7 @@ class Request:
     finish_reason: Optional[str] = None       # "length" | "stop" | None
     timing: RequestTiming = field(default_factory=RequestTiming)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.uid is None:
             self.uid = next(_UIDS)
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -224,6 +224,7 @@ class RequestOutput:
 
     @classmethod
     def from_request(cls, req: Request) -> "RequestOutput":
+        assert req.uid is not None    # auto-assigned in __post_init__
         return cls(uid=req.uid, prompt=req.prompt, tokens=list(req.generated),
                    finish_reason=req.finish_reason, timing=req.timing,
                    params=req.params)

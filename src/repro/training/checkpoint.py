@@ -81,7 +81,10 @@ def restore_checkpoint(fname: str, params_template: PyTree,
             if hasattr(leaf, "sharding") and leaf.sharding is not None:
                 try:
                     val = jax.device_put(val, leaf.sharding)
-                except Exception:
+                except (ValueError, RuntimeError):
+                    # best-effort placement: the checkpoint may restore
+                    # onto a different mesh/topology than it was saved
+                    # from; the unsharded value is still correct
                     pass
             leaves.append(val)
         return jax.tree_util.tree_unflatten(tdef, leaves)

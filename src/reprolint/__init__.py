@@ -1,0 +1,11 @@
+"""Alias package: ``python -m reprolint`` == ``python -m repro.analysis``.
+
+The implementation lives in :mod:`repro.analysis`; this package only
+provides the short module name the CLI and CI use.
+"""
+from repro.analysis import (Finding, LintResult, RULES, check_source,
+                            lint_paths, rules_by_code)
+from repro.analysis.cli import main
+
+__all__ = ["Finding", "LintResult", "RULES", "check_source", "lint_paths",
+           "main", "rules_by_code"]

@@ -1,0 +1,590 @@
+"""Self-tests for reprolint (src/repro/analysis).
+
+Per rule: a fixture that fires (positive), the same fixture silenced by
+``# reprolint: disable=CODE`` (suppressed), and a compliant variant
+(negative).  Plus: the live backends pass RL005 against the protocol
+parsed from the real ``runtime/base.py``, deleting ``verify_step`` from
+any backend fails RL005, the full repo lints clean through the CLI, and
+the baseline format is enforced.
+
+Everything here is pure-AST — no jax import — so the suite runs in the
+fast lane.
+"""
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import Project, check_source, lint_paths
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.rules import RULES, rules_by_code
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+PROJECT = Project.discover([str(REPO / "src")])
+
+BACKEND_FILES = [
+    "src/repro/runtime/tensor.py",
+    "src/repro/runtime/pipeline_backend.py",
+    "src/repro/runtime/sim.py",
+]
+
+
+def run_rule(code, source, relpath="src/repro/fixture.py"):
+    return check_source(textwrap.dedent(source), relpath=relpath,
+                        rules=[rules_by_code()[code]], project=PROJECT)
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+# --------------------------------------------------------------------- #
+# RL001 — jit-boundary hygiene
+# --------------------------------------------------------------------- #
+RL001_STATIC_BAD = """\
+    import functools
+    import jax
+
+    @functools.partial(jax.jit)
+    def f(x, mode="prefill"):
+        return x
+"""
+
+
+def test_rl001_missing_static_fires():
+    fs = run_rule("RL001", RL001_STATIC_BAD)
+    assert codes(fs) == ["RL001"] and "mode" in fs[0].message
+
+
+def test_rl001_missing_static_suppressed():
+    src = RL001_STATIC_BAD.replace(
+        "@functools.partial(jax.jit)",
+        "@functools.partial(jax.jit)  # reprolint: disable=RL001")
+    assert run_rule("RL001", src) == []
+
+
+def test_rl001_declared_static_clean():
+    src = RL001_STATIC_BAD.replace(
+        "functools.partial(jax.jit)",
+        'functools.partial(jax.jit, static_argnames=("mode",))')
+    assert run_rule("RL001", src) == []
+
+
+def test_rl001_static_argnums_clean():
+    assert run_rule("RL001", """\
+        import jax
+
+        def step(x, causal: bool = True):
+            return x
+
+        run = jax.jit(step, static_argnums=(1,))
+    """) == []
+
+
+def test_rl001_partial_burned_kwarg_clean():
+    # mode is burned into the partial: not a live jit parameter anymore
+    assert run_rule("RL001", """\
+        import functools
+        import jax
+
+        def fwd(x, mode="prefill"):
+            return x
+
+        run = jax.jit(functools.partial(fwd, mode="prefill"))
+    """) == []
+
+
+RL001_DONATE_BAD = """\
+    import jax
+
+    class B:
+        def __init__(self):
+            self._step = jax.jit(self._impl, donate_argnums=(0,))
+
+        def _impl(self, caches):
+            return caches
+
+        def go(self, caches):
+            out = self._step(caches)
+            return caches.sum() + out
+"""
+
+
+def test_rl001_donation_use_after_free_fires():
+    fs = run_rule("RL001", RL001_DONATE_BAD)
+    assert codes(fs) == ["RL001"] and "donated" in fs[0].message
+
+
+def test_rl001_donation_suppressed():
+    src = RL001_DONATE_BAD.replace(
+        "out = self._step(caches)",
+        "out = self._step(caches)  # reprolint: disable=RL001")
+    assert run_rule("RL001", src) == []
+
+
+def test_rl001_donation_rebind_clean():
+    # the sanctioned pattern: rebind the donated name from the result
+    src = RL001_DONATE_BAD.replace(
+        "out = self._step(caches)", "caches = self._step(caches)"
+    ).replace("return caches.sum() + out", "return caches.sum()")
+    assert run_rule("RL001", src) == []
+
+
+def test_rl001_out_of_scope_path_ignored():
+    assert check_source(textwrap.dedent(RL001_STATIC_BAD),
+                        relpath="tests/fixture.py",
+                        rules=[rules_by_code()["RL001"]],
+                        project=PROJECT) == []
+
+
+# --------------------------------------------------------------------- #
+# RL002 — host sync in hot paths
+# --------------------------------------------------------------------- #
+RL002_BAD = """\
+    import numpy as np
+
+    class B:
+        def decode_step(self, feeds):
+            logits = self._decode_fn(feeds)
+            return np.asarray(logits)
+"""
+RL002_PATH = "src/repro/runtime/fixture.py"
+
+
+def test_rl002_asarray_on_device_fires():
+    fs = run_rule("RL002", RL002_BAD, relpath=RL002_PATH)
+    assert codes(fs) == ["RL002"] and "decode_step" in fs[0].message
+
+
+def test_rl002_suppressed():
+    src = RL002_BAD.replace("return np.asarray(logits)",
+                            "return np.asarray(logits)"
+                            "  # reprolint: disable=RL002")
+    assert run_rule("RL002", src, relpath=RL002_PATH) == []
+
+
+def test_rl002_host_value_clean():
+    assert run_rule("RL002", """\
+        import numpy as np
+
+        class B:
+            def decode_step(self, feeds):
+                hist = sorted(feeds)
+                return np.asarray(hist)
+    """, relpath=RL002_PATH) == []
+
+
+def test_rl002_block_until_ready_fires():
+    fs = run_rule("RL002", """\
+        class B:
+            def verify_step(self, feeds):
+                out = self._verify_fn(feeds)
+                out.block_until_ready()
+                return out
+    """, relpath=RL002_PATH)
+    assert codes(fs) == ["RL002"]
+
+
+def test_rl002_cold_path_ignored():
+    # same sync outside a hot function name: not flagged
+    src = RL002_BAD.replace("decode_step", "summarize")
+    assert run_rule("RL002", src, relpath=RL002_PATH) == []
+
+
+def test_rl002_non_hot_file_ignored():
+    assert run_rule("RL002", RL002_BAD,
+                    relpath="src/repro/launch/fixture.py") == []
+
+
+# --------------------------------------------------------------------- #
+# RL003 — refcount discipline
+# --------------------------------------------------------------------- #
+RL003_ENSURE_BAD = """\
+    class B:
+        def decode_step(self, feeds):
+            for slot in feeds:
+                self.pager.ensure(slot, 1)
+"""
+
+
+def test_rl003_ungated_ensure_fires():
+    fs = run_rule("RL003", RL003_ENSURE_BAD)
+    assert codes(fs) == ["RL003"] and "free_blocks" in fs[0].message
+
+
+def test_rl003_ungated_ensure_suppressed():
+    src = RL003_ENSURE_BAD.replace(
+        "self.pager.ensure(slot, 1)",
+        "self.pager.ensure(slot, 1)  # reprolint: disable=RL003")
+    assert run_rule("RL003", src) == []
+
+
+def test_rl003_capacity_gate_clean():
+    assert run_rule("RL003", """\
+        class B:
+            def decode_step(self, feeds):
+                if self.need(feeds) > self.pager.free_blocks:
+                    raise PoolExhausted(len(feeds))
+                for slot in feeds:
+                    self.pager.ensure(slot, 1)
+    """) == []
+
+
+def test_rl003_rollback_handler_clean():
+    # the realloc_wave shape: grow under try, release + re-raise on
+    # exhaustion
+    assert run_rule("RL003", """\
+        class B:
+            def grow(self, slots):
+                done = []
+                try:
+                    for s in slots:
+                        self.pager.ensure(s, 1)
+                        done.append(s)
+                except PoolExhausted:
+                    for s in done:
+                        self.pager.release(s)
+                    raise
+    """) == []
+
+
+RL003_LEAK_BAD = """\
+    class Leaky:
+        def take(self, block):
+            self.allocator.incref(block)
+            self.mine.append(block)
+"""
+
+
+def test_rl003_unpaired_incref_fires():
+    fs = run_rule("RL003", RL003_LEAK_BAD)
+    assert codes(fs) == ["RL003"] and "Leaky" in fs[0].message
+
+
+def test_rl003_paired_release_clean():
+    src = RL003_LEAK_BAD + (
+        "\n        def drop(self, block):\n"
+        "            self.allocator.free([block])\n")
+    assert run_rule("RL003", src) == []
+
+
+# --------------------------------------------------------------------- #
+# RL004 — no silent fallbacks
+# --------------------------------------------------------------------- #
+def test_rl004_bare_except_fires():
+    fs = run_rule("RL004", """\
+        def f():
+            try:
+                g()
+            except:
+                pass
+    """)
+    assert codes(fs) == ["RL004"] and "bare" in fs[0].message
+
+
+def test_rl004_bare_except_suppressed():
+    assert run_rule("RL004", """\
+        def f():
+            try:
+                g()
+            # reprolint: disable=RL004
+            except:
+                pass
+    """) == []
+
+
+def test_rl004_broad_swallow_fires():
+    fs = run_rule("RL004", """\
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+    """)
+    assert codes(fs) == ["RL004"]
+
+
+def test_rl004_narrow_except_clean():
+    assert run_rule("RL004", """\
+        def f():
+            try:
+                g()
+            except (ValueError, RuntimeError):
+                pass
+    """) == []
+
+
+RL004_IMPL_BAD = """\
+    def attend(x, impl="xla"):
+        if impl == "pallas":
+            return fast(x)
+        return slow(x)
+"""
+
+
+def test_rl004_unvalidated_impl_dispatch_fires():
+    fs = run_rule("RL004", RL004_IMPL_BAD)
+    assert codes(fs) == ["RL004"] and "impl" in fs[0].message
+
+
+def test_rl004_impl_validator_clean():
+    src = RL004_IMPL_BAD.replace(
+        'if impl == "pallas":',
+        '_check_decode_impl(impl)\n        if impl == "pallas":')
+    assert run_rule("RL004", src) == []
+
+
+def test_rl004_impl_raise_clean():
+    assert run_rule("RL004", """\
+        def attend(x, impl="xla"):
+            if impl == "pallas":
+                return fast(x)
+            if impl != "xla":
+                raise ValueError(impl)
+            return slow(x)
+    """) == []
+
+
+# --------------------------------------------------------------------- #
+# RL005 — protocol conformance
+# --------------------------------------------------------------------- #
+def test_protocol_spec_loaded_from_base():
+    spec = PROJECT.protocol
+    assert spec is not None
+    abstract = {n for n, s in spec.methods.items() if s.is_abstract}
+    assert abstract == {"info", "prefill", "decode_step", "free_slot"}
+    # optional capabilities are stubs, not defaults
+    assert not spec.methods["verify_step"].has_default_impl
+    assert spec.methods["cached_prefix_len"].has_default_impl
+
+
+RL005_MISSING_BAD = """\
+    from repro.runtime.base import InferenceBackend
+
+    class HalfBackend(InferenceBackend):
+        @property
+        def info(self):
+            return self._info
+
+        def prefill(self, slots, prompts, prompt_lens=None):
+            return []
+"""
+
+
+def test_rl005_missing_abstract_fires():
+    fs = run_rule("RL005", RL005_MISSING_BAD)
+    msgs = " ".join(f.message for f in fs)
+    assert set(codes(fs)) == {"RL005"}
+    assert "decode_step" in msgs and "free_slot" in msgs
+
+
+def test_rl005_missing_abstract_suppressed():
+    src = RL005_MISSING_BAD.replace(
+        "class HalfBackend(InferenceBackend):",
+        "class HalfBackend(InferenceBackend):"
+        "  # reprolint: disable=RL005")
+    assert run_rule("RL005", src) == []
+
+
+RL005_MINIMAL_OK = """\
+    from repro.runtime.base import InferenceBackend
+
+    class FakeBackend(InferenceBackend):
+        @property
+        def info(self):
+            return self._info
+
+        def prefill(self, slots, prompts, prompt_lens=None):
+            return []
+
+        def decode_step(self, feeds):
+            return []
+
+        def free_slot(self, slot):
+            pass
+"""
+
+
+def test_rl005_minimal_backend_clean():
+    # abstract core only, matching signatures: valid (tests' fakes)
+    assert run_rule("RL005", RL005_MINIMAL_OK) == []
+
+
+def test_rl005_signature_drift_fires():
+    src = RL005_MINIMAL_OK.replace(
+        "def prefill(self, slots, prompts, prompt_lens=None):",
+        "def prefill(self, prompts, slots, prompt_lens=None):")
+    fs = run_rule("RL005", src)
+    assert codes(fs) == ["RL005"] and "drifts" in fs[0].message
+
+
+def test_rl005_required_optional_param_fires():
+    src = RL005_MINIMAL_OK.replace(
+        "def prefill(self, slots, prompts, prompt_lens=None):",
+        "def prefill(self, slots, prompts, prompt_lens):")
+    fs = run_rule("RL005", src)
+    assert codes(fs) == ["RL005"] and "prompt_lens" in fs[0].message
+
+
+def test_rl005_half_capability_pair_fires():
+    src = RL005_MINIMAL_OK + (
+        "\n        def verify_step(self, feeds):\n            return []\n")
+    fs = run_rule("RL005", src)
+    assert codes(fs) == ["RL005"] and "accept" in fs[0].message
+
+
+def test_rl005_full_capability_pair_clean():
+    src = RL005_MINIMAL_OK + (
+        "\n        def verify_step(self, feeds):\n            return []\n"
+        "\n        def accept(self, counts):\n            pass\n")
+    assert run_rule("RL005", src) == []
+
+
+def test_rl005_unrelated_class_ignored():
+    assert run_rule("RL005", """\
+        class NotABackend:
+            def prefill(self, whatever):
+                pass
+    """) == []
+
+
+# --- RL005 against the live backends --------------------------------- #
+def test_live_backends_pass_rl005():
+    res = lint_paths([str(REPO / p) for p in BACKEND_FILES],
+                     [rules_by_code()["RL005"]], PROJECT)
+    assert res.findings == [] and res.errors == []
+    assert res.n_files == len(BACKEND_FILES)
+
+
+@pytest.mark.parametrize("relpath", BACKEND_FILES)
+def test_deleting_verify_step_fails_rl005(relpath):
+    source = (REPO / relpath).read_text()
+    mutated = re.sub(r"\n(\s+)def verify_step\(", r"\n\1def _gone(",
+                     source, count=1)
+    assert mutated != source, f"{relpath} has no verify_step to delete"
+    fs = check_source(mutated, relpath=relpath,
+                      rules=[rules_by_code()["RL005"]], project=PROJECT)
+    assert any("verify_step" in f.message for f in fs), relpath
+
+
+# --------------------------------------------------------------------- #
+# RL006 — deprecated imports / mutable defaults
+# --------------------------------------------------------------------- #
+def test_rl006_engine_import_fires():
+    fs = run_rule("RL006",
+                  "from repro.serving.engine import ServeEngine\n")
+    assert codes(fs) == ["RL006"]
+
+
+def test_rl006_engine_import_suppressed():
+    fs = run_rule("RL006",
+                  "from repro.serving.engine import ServeEngine"
+                  "  # reprolint: disable=RL006\n")
+    assert fs == []
+
+
+def test_rl006_shim_allowlisted():
+    assert run_rule("RL006",
+                    "from repro.serving.engine import ServeEngine\n",
+                    relpath="src/repro/serving/__init__.py") == []
+
+
+def test_rl006_facade_import_clean():
+    assert run_rule("RL006", "from repro.serving import LLM\n") == []
+
+
+def test_rl006_mutable_default_fires():
+    fs = run_rule("RL006", "def f(xs=[]):\n    return xs\n")
+    assert codes(fs) == ["RL006"]
+
+
+def test_rl006_none_default_clean():
+    assert run_rule("RL006", "def f(xs=None):\n    return xs or []\n") == []
+
+
+# --------------------------------------------------------------------- #
+# engine: suppressions, baseline, CLI
+# --------------------------------------------------------------------- #
+def test_file_level_suppression():
+    src = ("# reprolint: disable-file=RL004\n"
+           "def f():\n"
+           "    try:\n"
+           "        g()\n"
+           "    except:\n"
+           "        pass\n")
+    assert check_source(src, rules=[rules_by_code()["RL004"]],
+                        project=PROJECT) == []
+
+
+def test_baseline_requires_note(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"code": "RL002", "path": "x.py", "scope": "f", "count": 1,
+         "note": "  "}]}))
+    with pytest.raises(baseline_mod.BaselineError):
+        baseline_mod.load(str(p))
+
+
+def test_baseline_count_budget(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"code": "RL002", "path": "x.py", "scope": "C.f", "count": 1,
+         "note": "known"}]}))
+    bl = baseline_mod.load(str(p))
+    from repro.analysis import Finding
+    f = Finding(code="RL002", message="m", path="x.py", line=3, col=0,
+                scope="C.f")
+    unmatched, n, unused = baseline_mod.apply([f, f], bl)
+    # one budgeted occurrence absorbed; the second is a NEW finding
+    assert n == 1 and len(unmatched) == 1 and unused == []
+
+
+def test_repo_baseline_is_valid():
+    bl = baseline_mod.load(str(REPO / "reprolint-baseline.json"))
+    assert bl  # loads, every entry has a non-empty note
+
+
+def _run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, "-m", "reprolint", *argv], cwd=REPO,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True)
+
+
+def test_cli_repo_is_clean():
+    # the acceptance-criteria invocation, kept green forever
+    proc = _run_cli("src", "tests", "benchmarks")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_json_format():
+    proc = _run_cli("src/repro/runtime", "--format", "json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(proc.stdout)
+    assert data["findings"] == [] and data["files"] > 0
+
+
+def test_cli_unknown_rule_code():
+    proc = _run_cli("src", "--select", "RL999")
+    assert proc.returncode == 2
+
+
+def test_cli_finds_violation(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(xs=[]):\n    return xs\n")
+    proc = _run_cli(str(bad), "--no-baseline")
+    assert proc.returncode == 1
+    assert "RL006" in proc.stdout
+
+
+def test_every_rule_has_fixture_coverage():
+    # this suite must keep exercising every registered code, firing and
+    # suppressed, per the acceptance criteria
+    here = pathlib.Path(__file__).read_text()
+    for rule in RULES:
+        fires = f'"{rule.code}"' in here
+        assert fires, f"no fixture coverage for {rule.code}"
