@@ -1,0 +1,182 @@
+"""Chaos-replay benchmark: fleet serving under injected backend failures.
+
+Replays one seeded arrival trace (``repro.serving.sched.trace``) through a
+multi-backend :class:`Fleet` four times — fault-free baseline, a mid-trace
+**crash** of one backend, a **transient storm** on one backend, and a
+**straggler** slowdown — with every fault injected deterministically by
+``runtime.faults.FaultInjectionBackend``.  SimBackend tokens are a pure
+function of prompt + history + seed, so correctness gates are exact:
+
+- **crash**: killing 1 of N backends mid-trace loses ZERO tokens — every
+  request finishes with output bit-identical to the fault-free run (queued
+  and running work is withdrawn from the quarantined backend and re-admitted
+  to survivors, in-flight prefixes re-prefilled), nothing is shed, and
+  goodput degrades by no more than the asserted bound (capacity loss, not
+  correctness loss);
+- **transient storm**: absorbed entirely inside the batcher's backoff —
+  zero quarantines, every failure matched by a retry, tokens identical;
+- **straggler**: a 4x-slowed backend never changes any token (scheduler
+  steps are the clock; slowness only shifts routing costs).
+
+Writes ``BENCH_chaos.json`` at the repo root (schema-checked by CI):
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py [--smoke]
+        [--requests 2000] [--backends 3] [--slots 4] [--crash-at 40]
+        [--goodput-drop 0.25] [--out ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--backends", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--mean-iat", type=float, default=0.9)
+    ap.add_argument("--crash-at", type=int, default=40,
+                    help="decode call index at which the faulty backend "
+                         "dies (mid-trace)")
+    ap.add_argument("--goodput-drop", type=float, default=0.25,
+                    help="max absolute SLO-goodput loss the crash scenario "
+                         "may cost vs the fault-free baseline (the "
+                         "bounded-degradation gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI (overrides --requests)")
+    ap.add_argument("--out", default=str(REPO / "BENCH_chaos.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = 150
+
+    import numpy as np
+
+    from repro.core.simulator import StageCosts
+    from repro.runtime.faults import FaultInjectionBackend
+    from repro.runtime.sim import SimBackend
+    from repro.serving import Request
+    from repro.serving.sched import Fleet, bursty_trace
+
+    def backend():
+        costs = StageCosts(prefill=np.array([1e-3]), decode=np.array([1e-3]),
+                           comm_prefill=np.array([]),
+                           comm_decode=np.array([]), return_comm=0.0)
+        return SimBackend(costs, n_slots=args.slots, seed=args.seed,
+                          max_len=256, cache_layout="paged",
+                          num_blocks=args.slots * 6)
+
+    trace = bursty_trace(args.requests, seed=args.seed,
+                         mean_iat=args.mean_iat)
+
+    SCENARIOS = {
+        "baseline": "",
+        "crash": f"crash@decode_step:{args.crash_at}",
+        "transient": "transient@decode_step:25x2,timeout@decode_step:60",
+        "straggler": "slow@decode_step:20*4",
+    }
+
+    def run(spec):
+        backends = [backend() for _ in range(args.backends)]
+        if spec:                       # fault the middle backend
+            backends[1] = FaultInjectionBackend(backends[1], spec,
+                                                seed=args.seed)
+        fleet = Fleet(backends, policy="edf", seed=args.seed)
+        for i, it in enumerate(trace):
+            fleet.submit(Request(prompt=it.prompt, params=it.params, uid=i),
+                         at_step=it.at_step)
+        done = fleet.run(max_steps=1_000_000)
+        toks = {u: list(r.generated) for u, r in done.items()}
+        met = {u: r.slo_met() for u, r in done.items()}
+        n_slo = sum(v is not None for v in met.values())
+        goodput = sum(v is True for v in met.values()) / max(n_slo, 1)
+        return fleet, toks, goodput
+
+    results = []
+    base_fleet, base_toks, base_goodput = None, None, 0.0
+    for name, spec in SCENARIOS.items():
+        fleet, toks, goodput = run(spec)
+        st = fleet.stats
+        if name == "baseline":
+            base_fleet, base_toks, base_goodput = fleet, toks, goodput
+        missing = sorted(set(base_toks) - set(toks))
+        mismatch = [u for u in toks
+                    if u in base_toks and toks[u] != base_toks[u]]
+        rec = {
+            "scenario": name, "faults": spec,
+            "requests": len(trace), "served": len(toks),
+            "missing": len(missing), "token_mismatches": len(mismatch),
+            "goodput_slo": goodput, "goodput_delta": goodput - base_goodput,
+            "failures": st.failures, "retries": st.retries,
+            "quarantines": st.quarantines, "recovered": st.recovered,
+            "tokens_recomputed": st.tokens_recomputed, "shed": st.shed,
+            "migrations": fleet.migrations,
+            "health": fleet.health(),
+        }
+        results.append(rec)
+        print(f"chaos_bench,{name:>9} served={rec['served']}/{len(trace)} "
+              f"mismatch={rec['token_mismatches']} "
+              f"goodput={goodput:.3f} ({rec['goodput_delta']:+.3f}) "
+              f"failures={st.failures} retries={st.retries} "
+              f"quarantines={st.quarantines} recovered={st.recovered} "
+              f"shed={st.shed}")
+
+        # ---- acceptance gates (the ISSUE's chaos contract) ------------- #
+        assert rec["served"] == len(trace) and not missing, \
+            f"{name}: lost requests {missing[:5]}"
+        assert rec["token_mismatches"] == 0, \
+            f"{name}: token mismatch for uids {mismatch[:5]}"
+        if name == "crash":
+            assert st.quarantines == 1 and st.shed == 0, rec
+            assert st.recovered > 0 and st.tokens_recomputed > 0, \
+                f"crash fired too late to catch in-flight work: {rec}"
+            assert goodput >= base_goodput - args.goodput_drop, \
+                (f"goodput collapsed: {goodput:.3f} vs baseline "
+                 f"{base_goodput:.3f} (allowed drop {args.goodput_drop})")
+        elif name == "transient":
+            assert st.quarantines == 0, rec
+            assert 0 < st.retries == st.failures, \
+                f"transients must all be absorbed by retries: {rec}"
+        elif name == "straggler":
+            assert st.quarantines == 0 and st.failures == 0, rec
+            assert "degraded" in fleet.health()[1], fleet.health()
+
+    by = {r["scenario"]: r for r in results}
+    summary = {
+        "baseline_goodput": base_goodput,
+        "crash_goodput": by["crash"]["goodput_slo"],
+        "crash_goodput_drop": base_goodput - by["crash"]["goodput_slo"],
+        "crash_recovered": by["crash"]["recovered"],
+        "crash_tokens_recomputed": by["crash"]["tokens_recomputed"],
+        "transient_retries": by["transient"]["retries"],
+        "token_mismatches_total": sum(r["token_mismatches"]
+                                      for r in results),
+        "shed_total": sum(r["shed"] for r in results),
+    }
+    print(f"chaos_bench,summary: crash drop "
+          f"{summary['crash_goodput_drop']:.3f} (bound {args.goodput_drop}) "
+          f"with {summary['crash_recovered']} recovered / "
+          f"{summary['crash_tokens_recomputed']} tokens recomputed; "
+          f"0 mismatches, 0 shed")
+
+    out = {
+        "config": {
+            "requests": args.requests, "backends": args.backends,
+            "slots": args.slots, "mean_iat": args.mean_iat,
+            "crash_at": args.crash_at, "goodput_drop": args.goodput_drop,
+            "seed": args.seed, "smoke": args.smoke,
+            "clock": "scheduler_steps",
+        },
+        "results": results,
+        "summary": summary,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,5 +43,20 @@ ENGINE_ALLOWED = frozenset(
 #: dispatch as validated (e.g. ``_check_decode_impl``).
 IMPL_VALIDATOR_PATTERN = r"check\w*impl"
 
+#: RL007: fleet/watchdog recovery code — the modules whose except handlers
+#: decide whether a backend failure is absorbed, retried, or quarantined.
+WATCHDOG_FILES = frozenset({"src/repro/serving/sched/fleet.py",
+                            "src/repro/serving/scheduler.py"})
+
+#: RL007: the typed failure taxonomy recovery paths may catch.  Catching
+#: anything broader (Exception, RuntimeError) turns scheduler bugs into
+#: "transient backend failures" and retries them forever.
+BACKEND_ERROR_TYPES = frozenset(
+    {"BackendError", "BackendDead", "BackendTimeout", "PoolExhausted"})
+
+#: RL007: a swallowed failure must leave a trace — the handler body (when
+#: it does not re-raise) must touch a stats/accounting name matching this.
+FAILURE_RECORD_PATTERN = r"stats|fail|retr|quarant|shed|recover|preempt"
+
 #: Default baseline filename, resolved against the repo root.
 BASELINE_NAME = "reprolint-baseline.json"

@@ -8,6 +8,7 @@ from repro.analysis.rules.rl003_refcount import RefcountDiscipline
 from repro.analysis.rules.rl004_fallbacks import NoSilentFallbacks
 from repro.analysis.rules.rl005_protocol import ProtocolConformance
 from repro.analysis.rules.rl006_imports import DeprecatedImportLeak
+from repro.analysis.rules.rl007_recovery import RecoveryDiscipline
 
 RULES: List[Rule] = [
     JitBoundaryHygiene(),
@@ -16,6 +17,7 @@ RULES: List[Rule] = [
     NoSilentFallbacks(),
     ProtocolConformance(),
     DeprecatedImportLeak(),
+    RecoveryDiscipline(),
 ]
 
 

@@ -1,0 +1,93 @@
+"""RL007 — recovery paths catch the typed taxonomy and record failures.
+
+PR 10 gave backend failures types (``BackendError`` / ``BackendTimeout`` /
+``BackendDead`` / ``PoolExhausted`` in ``runtime/base.py``) with retry
+semantics attached: transients are raised *before* any state mutates, so
+the scheduler may retry the same quantum; ``BackendDead`` must escalate to
+a quarantine.  Two failure modes keep trying to creep back in:
+
+- a recovery handler that catches ``Exception`` (or any non-taxonomy
+  type) turns scheduler bugs — the very thing tests must surface — into
+  "transient backend failures" and retries them forever;
+- a handler that absorbs a failure without touching any accounting makes
+  chaos invisible: the fleet looks healthy while silently burning retries.
+
+So inside the watchdog modules (``config.WATCHDOG_FILES``) every except
+handler must (1) name only ``config.BACKEND_ERROR_TYPES`` members and
+(2) either re-raise or touch a stats/accounting name matching
+``config.FAILURE_RECORD_PATTERN``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List
+
+from repro.analysis import config
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.project import (ModuleInfo, Project, dotted,
+                                    last_segment)
+
+_RECORD_RE = re.compile(config.FAILURE_RECORD_PATTERN)
+
+
+def _caught_names(node: ast.ExceptHandler) -> List[str]:
+    """Last dotted segments of every type the handler catches ([] = bare)."""
+    t = node.type
+    if t is None:
+        return []
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    return [last_segment(dotted(e) or "") for e in elts]
+
+
+def _records_failure(node: ast.ExceptHandler) -> bool:
+    """True when the handler re-raises or touches accounting state."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Raise):
+            return True
+        if isinstance(n, ast.Name) and _RECORD_RE.search(n.id):
+            return True
+        if isinstance(n, ast.Attribute) and _RECORD_RE.search(n.attr):
+            return True
+    return False
+
+
+class RecoveryDiscipline(Rule):
+    code = "RL007"
+    name = "recovery-discipline"
+    summary = ("fleet/watchdog recovery may catch only the typed "
+               "BackendError taxonomy, and every swallowed failure must "
+               "be recorded (stats/quarantine/shed) or re-raised")
+
+    def check(self, mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+        if mod.relpath not in config.WATCHDOG_FILES:
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            names = _caught_names(node)
+            if not names:
+                yield self.finding(
+                    mod, node,
+                    "bare 'except:' in a recovery path — catch the typed "
+                    "BackendError taxonomy so scheduler bugs surface "
+                    "instead of being retried as backend failures")
+                continue
+            bad = [n for n in names
+                   if n not in config.BACKEND_ERROR_TYPES]
+            if bad:
+                yield self.finding(
+                    mod, node,
+                    f"recovery path catches {', '.join(bad)} — only the "
+                    f"typed taxonomy "
+                    f"({', '.join(sorted(config.BACKEND_ERROR_TYPES))}) "
+                    "may be absorbed here; anything else is a scheduler "
+                    "bug that must propagate")
+                continue
+            if not _records_failure(node):
+                yield self.finding(
+                    mod, node,
+                    f"handler for {', '.join(names)} neither re-raises "
+                    "nor records the failure — swallowed faults must "
+                    "leave a trace (stats counter, quarantine, shed, "
+                    "retry bookkeeping)")

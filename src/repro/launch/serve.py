@@ -13,7 +13,8 @@ and never pads a prompt:
         --mode tp --batch 4 --gen 16 [--kvint8] [--stream] [--varlen] \
         [--cache-layout paged --impl pallas] \
         [--cache-layout paged --spec-k 4 --draft ngram] \
-        [--policy edf --ttft-slo 8 --e2e-slo 64]
+        [--policy edf --ttft-slo 8 --e2e-slo 64] \
+        [--inject-faults transient@decode_step:5x2 --max-retries 3]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --mode pipeline --stages 4            # devices default to --stages
 """
@@ -109,8 +110,23 @@ def main():
     ap.add_argument("--e2e-slo", type=int, default=None,
                     help="completion deadline in scheduler steps from "
                          "arrival (see --ttft-slo)")
+    ap.add_argument("--inject-faults", default="",
+                    help="deterministic fault schedule wrapped around the "
+                         "backend (runtime.faults), e.g. "
+                         "'transient@decode_step:5x2' or 'timeout@any~0.01' "
+                         "— exercises the scheduler's retry/backoff path "
+                         "(tp mode only)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="consecutive transient backend failures absorbed "
+                         "with exponential backoff before the scheduler "
+                         "gives up (BackendError taxonomy; docs/runtime.md "
+                         "'Fault tolerance')")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.inject_faults and args.mode != "tp":
+        ap.error("--inject-faults wraps the single tp-mode backend; chaos "
+                 "over a multi-backend fleet is benchmarks/chaos_bench.py")
 
     if args.policy != "fifo" and args.priority is None \
             and args.ttft_slo is None and args.e2e_slo is None:
@@ -175,11 +191,17 @@ def main():
         mesh = None
         if args.devices:
             mesh = jax.make_mesh((1, args.devices), ("data", "model"))
-        llm = LLM.from_backend(runtime.TensorBackend(
+        backend = runtime.TensorBackend(
             cfg, params, n_slots=args.slots or args.batch,
-            max_len=args.max_len, mesh=mesh, impl=args.impl, **kv_kw),
+            max_len=args.max_len, mesh=mesh, impl=args.impl, **kv_kw)
+        if args.inject_faults:
+            backend = runtime.FaultInjectionBackend(
+                backend, args.inject_faults, seed=args.seed)
+        llm = LLM.from_backend(
+            backend,
             seed=args.seed, min_bucket=args.min_bucket, prefill_chunk=chunk,
-            policy=args.policy, spec_k=args.spec_k, draft=args.draft)
+            policy=args.policy, spec_k=args.spec_k, draft=args.draft,
+            max_retries=args.max_retries)
     else:
         # planner -> backend -> serving in one call: the DP chooses the
         # (possibly uneven) stage layout over a homogeneous cluster profile
@@ -250,6 +272,12 @@ def main():
           f"tokens), {total} generated in {dt:.2f}s ({total / dt:.1f} tok/s) "
           f"— {llm.stats}")
     st = llm.stats
+    if args.inject_faults:
+        inj = llm.backend.injected
+        print(f"  faults ({args.inject_faults}): injected "
+              f"{ {k: v for k, v in inj.items() if v} }, "
+              f"absorbed with {st.retries} retries "
+              f"({st.failures} failures) — backend {llm.backend.health()}")
     if st.prefix_hits or st.prefill_chunks:
         print(f"  prefix cache: {st.prefix_hits} hits "
               f"({st.prefix_hit_tokens} prompt tokens reused); "

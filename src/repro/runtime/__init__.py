@@ -1,13 +1,18 @@
 """Unified serving runtime: one backend protocol over the tensor-parallel
 engine, the EdgeShard stage pipeline, and the planner's cost simulator."""
-from repro.runtime.base import (BackendInfo, BlockAllocator, InferenceBackend,
-                                PoolExhausted, SlotEvent, SlotPager)
+from repro.runtime.base import (BackendDead, BackendError, BackendInfo,
+                                BackendTimeout, BlockAllocator,
+                                InferenceBackend, PoolExhausted, SlotEvent,
+                                SlotPager)
 from repro.runtime.factory import from_deployment, plan_pipeline_spec
+from repro.runtime.faults import Fault, FaultInjectionBackend, parse_faults
 from repro.runtime.sim import SimBackend
 
 __all__ = [
-    "BackendInfo", "BlockAllocator", "InferenceBackend", "PoolExhausted",
+    "BackendDead", "BackendError", "BackendInfo", "BackendTimeout",
+    "BlockAllocator", "InferenceBackend", "PoolExhausted",
     "SlotEvent", "SlotPager",
+    "Fault", "FaultInjectionBackend", "parse_faults",
     "from_deployment", "plan_pipeline_spec", "SimBackend",
     "TensorBackend", "PipelineBackend",
 ]

@@ -30,11 +30,43 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Union
 import numpy as np
 
 
-class PoolExhausted(RuntimeError):
+class BackendError(RuntimeError):
+    """Typed failure of one backend operation.
+
+    The root of the runtime's failure taxonomy.  The contract every backend
+    (and the fault-injection wrapper) honors: a ``BackendError`` is raised
+    *before* the operation mutates any backend state, so the caller may
+    retry the same quantum verbatim.  A plain ``BackendError`` is
+    *transient* — the scheduler absorbs it with capped exponential backoff;
+    the subclasses refine the semantics:
+
+    - :class:`BackendTimeout` — the op exceeded its deadline (slow link,
+      hung device).  Transient: retryable like the base class.
+    - :class:`BackendDead` — the backend is gone for good (crash, lost
+      host).  Fatal: the fleet watchdog quarantines it and re-admits its
+      whole working set elsewhere; retrying is useless.
+    - :class:`PoolExhausted` — KV capacity, not health.  Handled by the
+      preempt-and-recompute machinery, never by retry/backoff.
+    """
+
+
+class BackendTimeout(BackendError):
+    """An operation exceeded its deadline.  Transient: retry with backoff."""
+
+
+class BackendDead(BackendError):
+    """The backend is permanently gone — every further operation (except
+    ``free_slot``, which must keep working so the scheduler can drain its
+    bookkeeping) will raise this too.  Fatal: do not retry; quarantine."""
+
+
+class PoolExhausted(BackendError):
     """A paged backend could not allocate KV blocks for its next quantum.
 
     Raised *before* any state mutates, so the quantum can be retried after
     the scheduler frees capacity (preempt-and-requeue the youngest request).
+    Capacity pressure, not a health signal: the scheduler's preemption
+    machinery owns it, never the retry/quarantine path.
     """
 
     def __init__(self, needed: int, free: int) -> None:
@@ -299,6 +331,9 @@ class BackendInfo:
     attn_impl: str = "xla"
     #: verify_step/accept (multi-token speculative verify) available
     spec_decode: bool = False
+    #: live health verdict: "healthy", "degraded" (serving but slow/flaky),
+    #: or "dead: <reason>" — mirrors :meth:`InferenceBackend.health`
+    health: str = "healthy"
 
     @property
     def paged(self) -> bool:
@@ -350,6 +385,15 @@ class InferenceBackend(abc.ABC):
     @property
     def n_slots(self) -> int:
         return self.info.n_slots
+
+    def health(self) -> str:
+        """Live health verdict: ``"healthy"``, ``"degraded"`` (still
+        serving, but slow or flaky), or ``"dead: <reason>"``.  In-process
+        backends are healthy by construction; wrappers (fault injection,
+        remote shims) override this to surface their live state.  The fleet
+        watchdog reads it for reporting only — failure *classification*
+        rides the typed :class:`BackendError` hierarchy, not polling."""
+        return "healthy"
 
     @abc.abstractmethod
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,

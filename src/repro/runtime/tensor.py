@@ -39,7 +39,7 @@ unpadded prefill, whichever bucket admission chose.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -387,10 +387,8 @@ class TensorBackend(InferenceBackend):
                 - int(self.pager.n_alloc[s]), 0) for s in live)
         if need > self.pager.free_blocks:
             raise PoolExhausted(needed=need, free=self.pager.free_blocks)
-        changed = False
-        for s in live:
-            changed |= self.pager.ensure(s, int(self._pos[s] + lens[s]) - 1)
-        if changed:
+        if self._grow_atomic(
+                [(s, int(self._pos[s] + lens[s]) - 1) for s in live]):
             self._push_tables()
         with use_mesh(self.mesh):
             logits, self.caches = self._verify_fn(
@@ -475,8 +473,8 @@ class TensorBackend(InferenceBackend):
             for s, st, ln in zip(slots, sts, lens))
         if need > self.pager.free_blocks:
             raise PoolExhausted(needed=need, free=self.pager.free_blocks)
-        for s, st, ln in zip(slots, sts, lens):
-            self.pager.ensure(s, int(st + ln) - 1)
+        self._grow_atomic([(s, int(st + ln) - 1)
+                           for s, st, ln in zip(slots, sts, lens)])
         self._push_tables()
         # extend_step works in slot space [n_slots, w]: scatter the wave's
         # rows to their slots and make every other row a no-op (len 0 =>
@@ -535,6 +533,33 @@ class TensorBackend(InferenceBackend):
             caches["tail"] = {k: fix(v, False)
                               for k, v in caches["tail"].items()}
         self.caches = caches
+
+    def _grow_atomic(self, targets: Sequence[Tuple[int, int]]) -> bool:
+        """Grow several slots' tables as ONE transaction: ensure every
+        ``(slot, pos)`` or roll the partial growth back and re-raise
+        :class:`PoolExhausted`.  The aggregate prechecks in verify_step /
+        prefill_chunk / decode_step make mid-loop exhaustion unreachable
+        today, but the rollback keeps ensure-then-mutate atomic even if the
+        precheck and the pager's accounting ever diverge — a failed quantum
+        must leak nothing (allocator invariants are regression-tested).
+        Returns True when any table changed (caller refreshes the device
+        tables)."""
+        grown: List[Tuple[int, int]] = []   # (slot, n_alloc before growth)
+        changed = False
+        try:
+            for s, pos in targets:
+                lo = int(self.pager.n_alloc[s])
+                if self.pager.ensure(s, pos):
+                    grown.append((s, lo))
+                    changed = True
+        except PoolExhausted:
+            for s, lo in grown:
+                hi = int(self.pager.n_alloc[s])
+                self.pager.allocator.free(self.pager.table[s, lo:hi].tolist())
+                self.pager.table[s, lo:hi] = -1
+                self.pager.n_alloc[s] = lo
+            raise
+        return changed
 
     # ------------------------------------------------------------------ #
     def prefill(self, slots: Sequence[int], prompts: np.ndarray,
@@ -602,10 +627,7 @@ class TensorBackend(InferenceBackend):
             if need > self.pager.free_blocks:     # raise BEFORE any mutation
                 raise PoolExhausted(needed=need,
                                     free=self.pager.free_blocks)
-            changed = False
-            for s in live:
-                changed |= self.pager.ensure(s, int(self._pos[s]))
-            if changed:
+            if self._grow_atomic([(s, int(self._pos[s])) for s in live]):
                 self._push_tables()
             mask = np.zeros(self.n_slots, bool)
             mask[live] = True

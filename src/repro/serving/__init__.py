@@ -1,9 +1,9 @@
 from repro.serving.llm import LLM
 from repro.serving.scheduler import (ContinuousBatcher, IncompleteServeError,
                                      SchedulerStats)
-from repro.serving.sched import (EDFPolicy, FIFOPolicy, Fleet, PriorityPolicy,
-                                 SchedPolicy, bursty_trace, make_policy,
-                                 poisson_trace, replay)
+from repro.serving.sched import (EDFPolicy, FIFOPolicy, Fleet, FleetStats,
+                                 PriorityPolicy, SchedPolicy, bursty_trace,
+                                 make_policy, poisson_trace, replay)
 from repro.serving.spec import (CallableDraft, DraftSource, NGramDraft,
                                 OracleDraft, make_draft)
 from repro.serving.types import (Request, RequestOutput, RequestTiming,
@@ -14,7 +14,8 @@ __all__ = [
     "TokenEvent", "ContinuousBatcher", "SchedulerStats",
     "IncompleteServeError", "ServeEngine", "sample_logits",
     "SchedPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
-    "make_policy", "Fleet", "poisson_trace", "bursty_trace", "replay",
+    "make_policy", "Fleet", "FleetStats", "poisson_trace", "bursty_trace",
+    "replay",
     "DraftSource", "NGramDraft", "OracleDraft", "CallableDraft",
     "make_draft",
 ]

@@ -65,13 +65,14 @@ class LLM:
     def __init__(self, backend, *, seed: int = 0, min_bucket: int = 1,
                  pad_id: int = 0, prefill_chunk: Optional[int] = None,
                  policy=None, max_preemptions: int = 3,
-                 spec_k: int = 0, draft="ngram"):
+                 spec_k: int = 0, draft="ngram", max_retries: int = 3):
         self.batcher = ContinuousBatcher(backend, seed=seed,
                                          min_bucket=min_bucket, pad_id=pad_id,
                                          prefill_chunk=prefill_chunk,
                                          policy=policy,
                                          max_preemptions=max_preemptions,
-                                         spec_k=spec_k, draft=draft)
+                                         spec_k=spec_k, draft=draft,
+                                         max_retries=max_retries)
         self.backend = self.batcher.backend
         self.deployment = None          # set by from_plan
 
@@ -95,7 +96,7 @@ class LLM:
                   prefix_cache: bool = False,
                   prefill_chunk: Optional[int] = None,
                   policy=None, max_preemptions: int = 3,
-                  spec_k: int = 0, draft="ngram",
+                  spec_k: int = 0, draft="ngram", max_retries: int = 3,
                   ) -> "LLM":
         """Plan → backend → serving in one call (the paper's Fig. 3 flow).
 
@@ -146,7 +147,7 @@ class LLM:
         llm = cls(backend, seed=seed, min_bucket=min_bucket, pad_id=pad_id,
                   prefill_chunk=prefill_chunk, policy=policy,
                   max_preemptions=max_preemptions,
-                  spec_k=spec_k, draft=draft)
+                  spec_k=spec_k, draft=draft, max_retries=max_retries)
         llm.deployment = dep
         return llm
 

@@ -10,7 +10,7 @@ from repro.serving.sched.trace import (DEFAULT_CLASSES, ReplayReport,
 __all__ = [
     "SchedPolicy", "FIFOPolicy", "PriorityPolicy", "EDFPolicy",
     "POLICIES", "make_policy", "DEFAULT_PREEMPT_SLACK",
-    "Fleet",
+    "Fleet", "FleetStats",
     "TraceClass", "TraceItem", "DEFAULT_CLASSES", "ReplayReport",
     "poisson_trace", "bursty_trace", "replay",
 ]
@@ -20,7 +20,7 @@ def __getattr__(name):
     # Fleet sits on top of ContinuousBatcher, which itself imports the
     # policy module above — loading it lazily keeps this package importable
     # from inside the scheduler without a cycle
-    if name == "Fleet":
-        from repro.serving.sched.fleet import Fleet
-        return Fleet
+    if name in ("Fleet", "FleetStats"):
+        from repro.serving.sched import fleet
+        return getattr(fleet, name)
     raise AttributeError(name)

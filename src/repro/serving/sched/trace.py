@@ -166,6 +166,12 @@ class ReplayReport:
     migrations: int = 0
     starvation_avoided: int = 0
     queue_wait_steps: int = 0
+    # failure accounting (0 unless the server is a Fleet under faults)
+    failures: int = 0                 # typed backend failures observed
+    retries: int = 0                  # transients absorbed by backoff
+    quarantines: int = 0              # backends removed by the watchdog
+    recovered: int = 0                # requests re-admitted to survivors
+    shed: int = 0                     # requests no survivor could hold
     by_class: dict = field(default_factory=dict)  # name -> {n, slo_met, n_slo}
 
     @property
@@ -216,4 +222,9 @@ def replay(server, trace: Sequence[TraceItem], *, max_steps: int = 1_000_000,
     rep.starvation_avoided = st.starvation_avoided
     rep.queue_wait_steps = st.queue_wait_steps
     rep.migrations = getattr(batcher, "migrations", 0)
+    rep.failures = st.failures
+    rep.retries = st.retries
+    rep.quarantines = getattr(st, "quarantines", 0)   # FleetStats only
+    rep.recovered = getattr(st, "recovered", 0)
+    rep.shed = getattr(st, "shed", 0)
     return rep

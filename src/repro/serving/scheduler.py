@@ -60,9 +60,15 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.runtime.base import InferenceBackend, PoolExhausted, SlotEvent
+from repro.runtime.base import (BackendDead, BackendError, InferenceBackend,
+                                PoolExhausted, SlotEvent)
 from repro.serving.sched.policy import SchedPolicy, make_policy
 from repro.serving.types import Request, TokenEvent
+
+#: cap on the exponential retry backoff (scheduler steps): consecutive
+#: transient failures wait 1, 2, 4, ... up to this many steps between
+#: attempts, so a long flake never parks a backend for unbounded time
+MAX_BACKOFF_STEPS = 8
 
 
 @dataclass
@@ -92,6 +98,9 @@ class SchedulerStats:
     # ^ bucketed prompt/chunk length -> number of admission waves at that shape
     spec_drafted: int = 0               # draft tokens fed through verify
     spec_accepted: int = 0              # of which the model itself produced
+    failures: int = 0                   # typed BackendError s observed
+    retries: int = 0                    # of which: absorbed by backoff
+    #                                     retry (the rest escalated)
 
     @property
     def utilization(self) -> float:
@@ -127,6 +136,8 @@ class SchedulerStats:
             s += (f", spec_drafted={self.spec_drafted}, "
                   f"spec_accepted={self.spec_accepted} "
                   f"({self.spec_acceptance:.0%})")
+        if self.failures:
+            s += f", failures={self.failures}, retries={self.retries}"
         return s + ")"
 
 
@@ -177,7 +188,7 @@ class ContinuousBatcher:
                  reserve_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  policy=None, max_preemptions: int = 3,
-                 spec_k: int = 0, draft="ngram"):
+                 spec_k: int = 0, draft="ngram", max_retries: int = 3):
         self.backend: InferenceBackend = _as_backend(backend)
         #: speculative decoding: verify up to spec_k tokens per quantum
         #: (1 emitted + spec_k-1 drafts).  0/1 = off.  Takes effect on
@@ -212,6 +223,15 @@ class ContinuousBatcher:
             raise ValueError(
                 f"max_preemptions must be >= 1, got {max_preemptions}")
         self.max_preemptions = max_preemptions
+        #: transient-failure budget: consecutive BackendError s absorbed by
+        #: capped exponential backoff before the failure escalates to the
+        #: caller (the Fleet watchdog quarantines on escalation).  0 =
+        #: escalate immediately; BackendDead always escalates.
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.max_retries = max_retries
+        self._consec_failures = 0
+        self._backoff_until = 0
         #: chunked prefill: cap each streamed-admission prefill pass at this
         #: many prompt tokens per scheduler quantum (None = whole suffix in
         #: one pass).  Takes effect on backends advertising
@@ -261,7 +281,8 @@ class ContinuousBatcher:
         return min(b, self.backend.info.max_len)
 
     def submit(self, req: Request, at_step: int = 0, *,
-               arrival_step: Optional[int] = None) -> int:
+               arrival_step: Optional[int] = None,
+               resume: bool = False) -> int:
         """Enqueue a request (optionally staged to arrive at a later step).
 
         Returns the request's uid.  Rejects duplicate uids — they would
@@ -271,6 +292,13 @@ class ContinuousBatcher:
         arrival itself): a dispatcher migrating a withdrawn request passes
         the original arrival so deadlines and latency accounting do not
         restart at the hand-off.
+
+        ``resume=True`` admits a request that already generated tokens on
+        another backend (``withdraw(..., running=True)``): admission
+        re-prefills its unpadded prefix — prompt plus everything generated —
+        exactly like a local preempt/resume, so the continued token stream
+        is identical to an uninterrupted run (recompute-on-resume makes
+        cross-backend migration token-correct).
         """
         if req.uid in self._uids:
             raise ValueError(
@@ -323,6 +351,11 @@ class ContinuousBatcher:
         self._uids.add(req.uid)
         self._n_submitted += 1
         self._sub_seq[req.uid] = self._n_submitted
+        if resume and req.generated:
+            # the resumable unpadded prefix, same as a local preemption's
+            self._resume[req.uid] = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.generated, np.int32)])
         req.timing.submitted_s = time.perf_counter()
         req.timing.submit_step = self.step_no
         req.timing.arrival_step = arrival_step if arrival_step is not None \
@@ -412,15 +445,43 @@ class ContinuousBatcher:
             self._sub_seq.pop(uid, None)
         return req
 
-    def withdraw(self, uid: int) -> Optional[Request]:
-        """Remove a *queued, never-started* request and return it, freeing
-        its uid — the primitive multi-backend spillover is built on: a
-        dispatcher withdraws work a saturated batcher has not begun and
-        re-submits it to an idle one.  Running, finished, or
-        preempted-mid-flight requests (whose generated tokens belong to
-        this backend) are not withdrawable; returns None for those."""
-        if uid in self._resume or uid in set(self.running) or uid in self.done:
+    def withdraw(self, uid: int, *, running: bool = False,
+                 ) -> Optional[Request]:
+        """Remove a request and return it, freeing its uid.
+
+        The default withdraws *queued, never-started* work only — the
+        primitive multi-backend spillover is built on: a dispatcher
+        withdraws work a saturated batcher has not begun and re-submits it
+        to an idle one.  Running, finished, or preempted-mid-flight
+        requests return None.
+
+        ``running=True`` additionally withdraws running and
+        preempted-mid-flight requests: the slot and its KV blocks are
+        freed and the returned request carries the resumable unpadded
+        prefix (``prompt`` + ``generated``), so ``submit(req,
+        resume=True)`` on any backend continues the exact token stream
+        (recompute-on-resume).  This is the one code path both fleet
+        failure recovery and user cancellation go through.  Finished
+        requests still return None (collect them from ``done``)."""
+        if uid in self.done:
             return None
+        if not running and \
+                (uid in self._resume or uid in set(self.running)):
+            return None
+        slot = next((s for s, r in self._slot_req.items() if r.uid == uid),
+                    None)
+        if slot is not None:
+            r = self._slot_req.pop(slot)
+            self.backend.free_slot(slot)
+            self._feeds.pop(slot, None)
+            self._chunking.pop(slot, None)
+            self._free.append(slot)
+            self._uids.discard(uid)
+            self._sub_seq.pop(uid, None)
+            self._admit_seq.pop(uid, None)
+            self._keys.pop(uid, None)
+            self._enq_step.pop(uid, None)
+            return r
         for i, r in enumerate(self.queue):
             if r.uid == uid:
                 del self.queue[i]
@@ -436,6 +497,8 @@ class ContinuousBatcher:
         self._uids.discard(uid)
         self._sub_seq.pop(uid, None)
         self._akey.pop(uid, None)
+        self._resume.pop(uid, None)   # only present when running=True let
+        #                               a preempted-mid-flight request out
         # wait spent here still counts: attribute it before handing off
         waited = self.step_no - self._enq_step.pop(uid, self.step_no)
         r.timing.queued_steps += waited
@@ -516,6 +579,27 @@ class ContinuousBatcher:
         if len(self._slot_req) <= 1:
             return False
         self._preempt(self._pick_victim())
+        return True
+
+    # ------------------------------------------------------------------ #
+    # transient-failure absorption (typed BackendError, not PoolExhausted)
+    # ------------------------------------------------------------------ #
+    def _note_failure(self, exc: BackendError) -> bool:
+        """Record a typed backend failure whose op mutated nothing (the
+        BackendError contract).  Returns True when the failure is absorbed:
+        the same quantum retries after a capped exponential backoff
+        (1, 2, 4, ... up to ``MAX_BACKOFF_STEPS`` idle steps).  Returns
+        False when it must escalate to the caller — ``BackendDead``
+        immediately, transients after ``max_retries`` consecutive failures
+        (the Fleet watchdog quarantines the backend on escalation)."""
+        self.stats.failures += 1
+        self._consec_failures += 1
+        if isinstance(exc, BackendDead) or \
+                self._consec_failures > self.max_retries:
+            return False
+        self.stats.retries += 1
+        self._backoff_until = self.step_no + 1 + min(
+            1 << (self._consec_failures - 1), MAX_BACKOFF_STEPS)
         return True
 
     def _slo_preempt(self) -> bool:
@@ -745,6 +829,12 @@ class ContinuousBatcher:
                 if not self._preempt_victim():
                     raise
                 return
+            except BackendError as e:
+                # typed failure before any mutation: the chunk state is
+                # intact, so the same chunks retry after backoff
+                if not self._note_failure(e):
+                    raise
+                return
             for slot, n, done in zip(slots, lens, last):
                 if done:
                     del self._chunking[slot]
@@ -773,6 +863,13 @@ class ContinuousBatcher:
             self._enqueue(heapq.heappop(self._arrivals)[2])
         if not (self.queue or self._slot_req or self._arrivals):
             self.stats.queued = 0
+            return out
+        if self.step_no < self._backoff_until:
+            # transient-failure backoff: freeze admission and decode, but
+            # the step still counts (arrivals release, queues age, the
+            # fleet's lockstep clock advances) so deadlines stay honest
+            self.stats.queued = len(self.queue)
+            self.step_no += 1
             return out
         # policy order first: the rest of admission just pulls queue[0]
         self._sort_queue()
@@ -807,7 +904,20 @@ class ContinuousBatcher:
                     break
                 req = self.queue.popleft()
                 slot = self._free.popleft()
-                start = self.backend.start_stream(slot, tokens)
+                try:
+                    start = self.backend.start_stream(slot, tokens)
+                except BackendError as e:
+                    # nothing mutated (typed-failure contract): restore the
+                    # admission state and either wait out the pool or
+                    # retry/escalate the failure
+                    self._free.appendleft(slot)
+                    self.queue.appendleft(req)
+                    self._queue_dirty = True
+                    if isinstance(e, PoolExhausted):
+                        break
+                    if not self._note_failure(e):
+                        raise
+                    break
                 if prefix is not None:
                     del self._resume[req.uid]
                     self.stats.resumes += 1
@@ -862,16 +972,22 @@ class ContinuousBatcher:
             try:
                 events = self.backend.prefill(slots, padded,
                                               prompt_lens=lens)
-            except PoolExhausted:
-                # the lazy-allocating pipeline can reach here despite the
-                # budget gate; put everything back (a resumed request keeps
-                # its _resume prefix — it is only dropped on success) and
-                # let decode drain
+            except BackendError as e:
+                # the lazy-allocating pipeline can reach PoolExhausted here
+                # despite the budget gate, and any backend may fail
+                # transiently; either way nothing mutated — put everything
+                # back (a resumed request keeps its _resume prefix — it is
+                # only dropped on success).  Pool pressure waits for decode
+                # to drain; typed failures retry with backoff or escalate.
                 for s in reversed(slots):
                     self._free.appendleft(s)
                 for r in reversed(wave):
                     self.queue.appendleft(r)
                 self._queue_dirty = True
+                if isinstance(e, PoolExhausted):
+                    break
+                if not self._note_failure(e):
+                    raise
                 break
             if resumed:
                 del self._resume[wave[0].uid]
@@ -902,11 +1018,19 @@ class ContinuousBatcher:
                     else:
                         self._handle(self.backend.decode_step(self._feeds),
                                      out)
+                    self._consec_failures = 0   # a served quantum resets
+                    #                             the transient streak
                     break
                 except PoolExhausted:
                     if not self._preempt_victim():
                         raise   # a lone request outgrowing the pool is a
                                 # sizing bug submit() should have rejected
+                except BackendError as e:
+                    # typed failure, nothing mutated: the same feeds retry
+                    # after backoff, or the failure escalates to the fleet
+                    if not self._note_failure(e):
+                        raise
+                    break
         self.stats.queued = len(self.queue)
         self.step_no += 1
         return out

@@ -1,0 +1,414 @@
+"""Fault injection + fleet failure recovery (PR 10).
+
+Three layers under test, bottom up:
+
+- ``runtime/faults.py``: the deterministic fault injector — schedule
+  parsing, seeded reproducibility, and the inject-BEFORE-mutate contract
+  that makes retry-the-same-quantum safe;
+- ``serving/scheduler.py``: the batcher absorbs transient
+  ``BackendError`` s with capped exponential backoff and escalates fatal
+  ones; ``withdraw(..., running=True)`` frees a running slot and returns
+  the resumable prefix;
+- ``serving/sched/fleet.py``: the watchdog quarantines a failed backend,
+  drains its queued AND running work onto survivors, and the recovered
+  token streams are **bit-identical** to a fault-free run (SimBackend
+  tokens are a pure function of prompt + history + seed) — including a
+  crash-at-every-step sweep.
+
+Plus the satellite regression: ``TensorBackend`` exception paths leak no
+partial pager mutations (allocator invariants via the property-suite
+checker).
+"""
+import numpy as np
+import pytest
+
+from repro.core.simulator import StageCosts
+from repro.runtime import SimBackend
+from repro.runtime.base import (BackendDead, BackendError, BackendTimeout,
+                                PoolExhausted)
+from repro.runtime.faults import Fault, FaultInjectionBackend, parse_faults
+from repro.serving import ContinuousBatcher, Request, SamplingParams
+from repro.serving.sched.fleet import Fleet
+
+
+def costs_1stage():
+    return StageCosts(prefill=np.array([1e-3]), decode=np.array([1e-3]),
+                      comm_prefill=np.array([]), comm_decode=np.array([]),
+                      return_comm=0.0)
+
+
+def sim(n_slots=2, seed=0, **kw):
+    return SimBackend(costs_1stage(), n_slots=n_slots, seed=seed, **kw)
+
+
+def req(uid, plen=6, gen=5, **params):
+    prompt = (np.arange(plen, dtype=np.int32) + 7 * uid) % 97 + 1
+    return Request(prompt, SamplingParams(max_tokens=gen, **params), uid=uid)
+
+
+# --------------------------------------------------------------------------- #
+# schedule parsing + Fault validation
+# --------------------------------------------------------------------------- #
+
+def test_parse_fault_specs():
+    f, = parse_faults("crash@decode_step:40")
+    assert (f.kind, f.op, f.at_call, f.count) == \
+        ("crash", "decode_step", 40, 1)
+    f, = parse_faults("transient@prefill:2x3")
+    assert (f.kind, f.op, f.at_call, f.count) == ("transient", "prefill", 2, 3)
+    f, = parse_faults("timeout@any~0.01")
+    assert (f.kind, f.op, f.at_call, f.p) == ("timeout", "any", None, 0.01)
+    f, = parse_faults("slow@decode_step:10*4")
+    assert (f.kind, f.at_call, f.slow_factor) == ("slow", 10, 4.0)
+    two = parse_faults("crash@decode_step:9, timeout@prefill~0.5")
+    assert [f.kind for f in two] == ["crash", "timeout"]
+    assert parse_faults("") == []
+    assert parse_faults([Fault("crash", "decode_step", at_call=1)])[0].op == \
+        "decode_step"
+
+
+@pytest.mark.parametrize("bad", ["crash", "bogus@decode_step:1",
+                                 "crash@bogus_op:1", "crash@decode_step:1x0"])
+def test_bad_fault_specs_raise(bad):
+    with pytest.raises(ValueError):
+        parse_faults(bad)
+
+
+def test_fault_needs_trigger():
+    with pytest.raises(ValueError, match="at_call or p"):
+        Fault("transient", "decode_step")
+    Fault("slow", "decode_step")          # slow may be unconditional
+
+
+# --------------------------------------------------------------------------- #
+# injection semantics
+# --------------------------------------------------------------------------- #
+
+def drive(backend, plen=4, n_decode=8):
+    """Prefill slot 0 then decode; returns (tokens, raised call indices)."""
+    toks, raised = [], []
+    prompt = np.arange(1, plen + 1, dtype=np.int32)[None, :]
+    ev, = backend.prefill([0], prompt)
+    toks.append(int(ev.token))
+    for k in range(n_decode):
+        try:
+            ev, = backend.decode_step({0: toks[-1]})
+        except BackendError:
+            raised.append(k)
+            continue
+        toks.append(int(ev.token))
+    return toks, raised
+
+
+def test_typed_kinds_raise_their_types():
+    for spec, exc in [("timeout@decode_step:0", BackendTimeout),
+                      ("transient@decode_step:0", BackendError),
+                      ("pool@decode_step:0", PoolExhausted)]:
+        fb = FaultInjectionBackend(sim(), spec)
+        fb.prefill([0], np.ones((1, 4), np.int32))
+        with pytest.raises(exc):
+            fb.decode_step({0: 1})
+        assert sum(fb.injected.values()) == 1
+
+
+def test_crash_is_permanent_and_drainable():
+    fb = FaultInjectionBackend(sim(), "crash@decode_step:1")
+    ev, = fb.prefill([0], np.ones((1, 4), np.int32))
+    fb.decode_step({0: int(ev.token)})            # call 0 survives
+    with pytest.raises(BackendDead):
+        fb.decode_step({0: 1})
+    with pytest.raises(BackendDead):              # dead stays dead, all ops
+        fb.prefill([0], np.ones((1, 4), np.int32))
+    assert fb.health().startswith("dead:")
+    assert fb.info.health == fb.health()
+    fb.free_slot(0)                               # draining must still work
+
+
+def test_probabilistic_faults_deterministic_in_seed():
+    runs = []
+    for _ in range(2):
+        fb = FaultInjectionBackend(sim(), "transient@decode_step~0.3",
+                                   seed=42)
+        runs.append(drive(fb, n_decode=20)[1])
+    assert runs[0] == runs[1] and runs[0]   # same calls failed, and some did
+
+
+def test_slow_fault_degrades_not_fails():
+    fb = FaultInjectionBackend(sim(), "slow@decode_step:2*4")
+    base = fb.inner.costs.decode.copy()
+    toks, raised = drive(fb, n_decode=6)
+    assert raised == []                       # stragglers never raise
+    np.testing.assert_allclose(fb.inner.costs.decode, base * 4)
+    assert fb.health() == "degraded"
+    assert fb.injected["slow"] == 1           # scaled once, not per call
+
+
+def test_injection_precedes_mutation():
+    """A failed op must leave inner state untouched: after the injected
+    failure, a retry of the same feed continues the exact token stream a
+    fault-free twin produces."""
+    twin, fb = sim(), FaultInjectionBackend(sim(), "transient@decode_step:1")
+    toks_t, _ = drive(twin, n_decode=6)
+    toks_f, raised = drive(fb, n_decode=7)    # one extra call pays the retry
+    assert raised == [1]
+    assert toks_f == toks_t[:len(toks_f)] and len(toks_f) >= 6
+
+
+# --------------------------------------------------------------------------- #
+# batcher: transient absorption, backoff, escalation, withdraw(running)
+# --------------------------------------------------------------------------- #
+
+def serve(backend, reqs, **kw):
+    cb = ContinuousBatcher(backend, **kw)
+    for r in reqs:
+        cb.submit(r)
+    done = cb.run()
+    return {u: r.generated for u, r in done.items()}, cb
+
+
+def test_batcher_absorbs_transients_bit_identically():
+    reqs = lambda: [req(1), req(2, plen=4, gen=6)]
+    base, _ = serve(sim(), reqs())
+    out, cb = serve(FaultInjectionBackend(sim(), "transient@decode_step:2x2"),
+                    reqs())
+    assert out == base                         # zero token mismatches
+    assert cb.stats.failures == 2 and cb.stats.retries == 2
+
+
+def test_batcher_backoff_is_capped_exponential():
+    cb = ContinuousBatcher(
+        FaultInjectionBackend(sim(), "transient@decode_step:0x3"),
+        max_retries=3)
+    cb.submit(req(1, gen=3))
+    waits = []
+    while cb.has_work and cb.step_no < 200:
+        before = cb._backoff_until
+        cb.step()
+        if cb._backoff_until != before:
+            waits.append(cb._backoff_until - cb.step_no)
+    assert waits == [1, 2, 4]                  # 2^(k-1), capped at 8
+    assert cb.stats.retries == 3
+
+
+def test_batcher_escalates_past_retry_budget():
+    cb = ContinuousBatcher(
+        FaultInjectionBackend(sim(), "transient@decode_step:0x10"),
+        max_retries=2)
+    cb.submit(req(1))
+    with pytest.raises(BackendError):
+        cb.run()
+    assert cb.stats.failures == 3              # 2 absorbed + the escalation
+
+
+def test_batcher_escalates_backend_dead_immediately():
+    cb = ContinuousBatcher(
+        FaultInjectionBackend(sim(), "crash@decode_step:1"), max_retries=5)
+    cb.submit(req(1))
+    with pytest.raises(BackendDead):
+        cb.run()
+    assert cb.stats.retries == 0               # fatal: never retried
+
+
+def test_withdraw_running_returns_resumable_prefix():
+    base, _ = serve(sim(n_slots=1), [req(1, gen=8)])
+    cb = ContinuousBatcher(sim(n_slots=1))
+    cb.submit(req(1, gen=8))
+    for _ in range(4):
+        cb.step()
+    assert cb.status(1) == "running"
+    assert cb.withdraw(1) is None              # default: running is off-limits
+    r = cb.withdraw(1, running=True)
+    assert r is not None and 0 < len(r.generated) < 8
+    assert cb.running == [] and len(cb._free) == 1 and not cb.has_work
+    info = cb.backend.info
+    assert info.free_blocks == info.total_blocks   # slot + blocks freed
+    # cancellation and recovery share this path: resume elsewhere, the
+    # continued stream is the uninterrupted one
+    cb2 = ContinuousBatcher(sim(n_slots=1))
+    cb2.submit(r, resume=True)
+    done = cb2.run()
+    assert done[1].generated == base[1]
+
+
+# --------------------------------------------------------------------------- #
+# fleet: quarantine, drain, re-admission, shedding
+# --------------------------------------------------------------------------- #
+
+def fleet_of(n=3, faulty=None, spec="", seed=0, **kw):
+    backends = [sim(n_slots=2, seed=seed) for _ in range(n)]
+    if faulty is not None:
+        backends[faulty] = FaultInjectionBackend(backends[faulty], spec,
+                                                 seed=seed)
+    return Fleet(backends, seed=seed, **kw)
+
+
+REQS = [dict(uid=u, plen=4 + u % 3, gen=4 + u % 4) for u in range(1, 7)]
+
+
+def run_fleet(f):
+    for kw in REQS:
+        f.submit(req(**kw), at_step=kw["uid"] // 2)
+    done = f.run()
+    return {u: r.generated for u, r in done.items()}
+
+
+def test_fleet_crash_recovery_is_bit_identical():
+    base = run_fleet(fleet_of())
+    f = fleet_of(faulty=1, spec="crash@decode_step:3")
+    out = run_fleet(f)
+    st = f.stats
+    assert st.quarantines == 1
+    assert out == base                         # zero token mismatches
+    assert st.recovered == len(f.recovered_uids) > 0
+    assert st.shed == 0 and not f.failed
+    assert f.health()[1].startswith("quarantined (BackendDead")
+    assert any(r.timing.preemptions or True for r in f.done.values())
+    # recovered in-flight work re-prefilled its prefix on the survivor
+    assert st.tokens_recomputed > 0 or all(
+        not f.done[u].generated for u in f.recovered_uids)
+
+
+def test_fleet_crash_at_every_step_sweep():
+    """Kill backend 1 at each decode call k: recovered outputs stay
+    bit-identical to the fault-free run for every k (the chaos gate)."""
+    base = run_fleet(fleet_of())
+    for k in range(10):
+        f = fleet_of(faulty=1, spec=f"crash@decode_step:{k}")
+        out = run_fleet(f)
+        st = f.stats
+        assert out == base, f"token mismatch with crash at decode call {k}"
+        fired = f.batchers[1].backend.injected["crash"] > 0
+        assert st.quarantines == (1 if fired else 0), k
+        assert st.recovered == len(f.recovered_uids), k
+        assert st.shed == 0, k
+
+
+def test_fleet_absorbs_transient_storm_without_quarantine():
+    base = run_fleet(fleet_of())
+    f = fleet_of(faulty=1, spec="transient@decode_step:3x2")
+    out = run_fleet(f)
+    st = f.stats
+    assert out == base
+    assert st.quarantines == 0 and st.retries >= 2 and st.failures >= 2
+
+
+def test_fleet_sheds_what_no_survivor_can_hold():
+    big, small = sim(n_slots=2), sim(n_slots=2, max_len=16)
+    f = Fleet([FaultInjectionBackend(big, "crash@decode_step:2"), small])
+    # only the (faulty) big backend can hold this one
+    f.submit(req(1, plen=8, gen=20))
+    f.submit(req(2, plen=4, gen=4))            # fits anywhere
+    done = f.run()
+    assert sorted(done) == [2]
+    assert f.stats.quarantines == 1 and f.stats.shed == 1
+    assert f.failed[1].finish_reason == "shed"
+    assert "max_len" in f.failed_reason[1]
+
+
+def test_fleet_with_no_survivors_reraises():
+    f = Fleet([FaultInjectionBackend(sim(), "crash@decode_step:1")])
+    f.submit(req(1))
+    with pytest.raises(BackendDead):
+        f.run()
+    assert f.stats.quarantines == 1
+    assert f.failed and "no surviving backend" in f.failed_reason[1]
+
+
+def test_fleet_deadline_admission():
+    f = Fleet([sim()])
+    with pytest.raises(ValueError, match="infeasible.*relax e2e_slo"):
+        f.submit(req(1, gen=50, e2e_slo=10))
+    # the same request is admissible with admission off (it will just miss)
+    f2 = Fleet([sim()], deadline_admission=False)
+    f2.submit(req(1, gen=50, e2e_slo=10))
+    done = f2.run()
+    assert len(done[1].generated) == 50 and done[1].slo_met() is False
+    # feasible deadlines pass admission
+    f.submit(req(2, gen=10, e2e_slo=40))
+    assert sorted(f.run()) == [2]
+
+
+def test_fleet_stats_aggregate_failure_fields():
+    f = fleet_of(faulty=0, spec="transient@decode_step:1")
+    run_fleet(f)
+    st = f.stats
+    assert st.failures == sum(b.stats.failures for b in f.batchers) == 1
+    assert st.retries == 1
+    assert "quarantines" not in str(st)        # only printed when nonzero
+    f2 = fleet_of(faulty=1, spec="crash@decode_step:2")
+    run_fleet(f2)
+    assert "quarantines=1" in str(f2.stats)
+
+
+# --------------------------------------------------------------------------- #
+# satellite: TensorBackend exception paths leak no partial mutations
+# --------------------------------------------------------------------------- #
+
+def _pager_snapshot(backend):
+    p = backend.pager
+    return (p.table.copy(), p.n_alloc.copy(), p.allocator.refcount.copy(),
+            backend._pos.copy(), backend._active.copy())
+
+
+def _assert_unchanged(backend, snap):
+    from test_allocator_properties import check_invariants
+    table, n_alloc, refc, pos, active = snap
+    p = backend.pager
+    np.testing.assert_array_equal(p.table, table)
+    np.testing.assert_array_equal(p.n_alloc, n_alloc)
+    np.testing.assert_array_equal(p.allocator.refcount, refc)
+    np.testing.assert_array_equal(backend._pos, pos)
+    np.testing.assert_array_equal(backend._active, active)
+    check_invariants(p)
+
+
+def test_tensor_exception_paths_leave_allocator_intact():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.runtime import TensorBackend
+    from test_allocator_properties import check_invariants
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=1)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    b = TensorBackend(cfg, params, n_slots=2, max_len=32,
+                      cache_layout="paged", block_size=4, num_blocks=4)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    b.prefill([0], prompt[None, :])            # 2 of 4 blocks
+    assert int(b.pager.n_alloc[0]) == 2
+
+    # verify_step: needs 3 more blocks, pool has 2 -> raise, nothing moves
+    snap = _pager_snapshot(b)
+    with pytest.raises(PoolExhausted):
+        b.verify_step({0: rng.integers(1, cfg.vocab_size, 9)})
+    _assert_unchanged(b, snap)
+    assert not b._pending                      # no half-open verify quantum
+
+    # prefill_chunk on a second stream: same atomicity
+    p2 = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+    b.start_stream(1, p2)
+    snap = _pager_snapshot(b)
+    with pytest.raises(PoolExhausted):
+        b.prefill_chunk([1], p2[None, :], [12], [0], [True])
+    _assert_unchanged(b, snap)
+    b.free_slot(1)
+
+    # decode growth past the pool: precheck raises, state intact
+    feeds = {0: int(prompt[0])}
+    for _ in range(8):                         # pos 8 -> 16 fills the pool
+        ev, = b.decode_step(feeds)
+        feeds[0] = int(np.argmax(ev.logits))
+    assert int(b.pager.n_alloc[0]) == 4 and b.pager.free_blocks == 0
+    snap = _pager_snapshot(b)
+    with pytest.raises(PoolExhausted):
+        b.decode_step(feeds)                   # pos 16 needs a 5th block
+    _assert_unchanged(b, snap)
+
+    # _grow_atomic transactionality: partial growth rolls back on failure
+    b.free_slot(0)
+    assert b.pager.free_blocks == 4
+    snap = _pager_snapshot(b)
+    with pytest.raises(PoolExhausted):
+        b._grow_atomic([(0, 7), (1, 31)])      # 2 blocks fit, then 8 don't
+    _assert_unchanged(b, snap)
+    check_invariants(b.pager)

@@ -507,6 +507,82 @@ def test_rl006_none_default_clean():
 
 
 # --------------------------------------------------------------------- #
+# RL007 — recovery discipline (watchdog files only)
+# --------------------------------------------------------------------- #
+FLEET_PATH = "src/repro/serving/sched/fleet.py"
+
+RL007_BROAD_CATCH = """\
+    def step(self):
+        try:
+            self.batcher.step()
+        except Exception as e:
+            self.stats.failures += 1
+"""
+
+RL007_SILENT_SWALLOW = """\
+    def step(self):
+        try:
+            self.batcher.step()
+        except BackendError:
+            pass
+"""
+
+
+def test_rl007_broad_catch_fires():
+    fs = run_rule("RL007", RL007_BROAD_CATCH, relpath=FLEET_PATH)
+    assert codes(fs) == ["RL007"] and "Exception" in fs[0].message
+
+
+def test_rl007_bare_except_fires():
+    fs = run_rule("RL007",
+                  "def f():\n    try:\n        g()\n    except:\n"
+                  "        raise SystemExit\n", relpath=FLEET_PATH)
+    assert codes(fs) == ["RL007"] and "bare" in fs[0].message
+
+
+def test_rl007_silent_swallow_fires():
+    fs = run_rule("RL007", RL007_SILENT_SWALLOW, relpath=FLEET_PATH)
+    assert codes(fs) == ["RL007"] and "record" in fs[0].message
+
+
+def test_rl007_suppressed():
+    src = RL007_BROAD_CATCH.replace(
+        "except Exception as e:",
+        "except Exception as e:  # reprolint: disable=RL007")
+    assert run_rule("RL007", src, relpath=FLEET_PATH) == []
+
+
+def test_rl007_typed_and_recorded_clean():
+    assert run_rule("RL007", """\
+        def step(self):
+            try:
+                self.batcher.step()
+            except BackendDead as e:
+                self._quarantine(0, e)
+            except (BackendTimeout, BackendError):
+                self.stats.retries += 1
+            except PoolExhausted:
+                raise
+    """, relpath=FLEET_PATH) == []
+
+
+def test_rl007_scoped_to_watchdog_files():
+    # the same broad catch is RL007-clean outside the watchdog modules
+    # (RL004's blanket rules still apply there)
+    assert run_rule("RL007", RL007_BROAD_CATCH,
+                    relpath="src/repro/serving/llm.py") == []
+
+
+def test_rl007_live_watchdog_files_are_clean():
+    from repro.analysis import config as lint_config
+    for rel in sorted(lint_config.WATCHDOG_FILES):
+        src = (REPO / rel).read_text()
+        assert check_source(src, relpath=rel,
+                            rules=[rules_by_code()["RL007"]],
+                            project=PROJECT) == [], rel
+
+
+# --------------------------------------------------------------------- #
 # engine: suppressions, baseline, CLI
 # --------------------------------------------------------------------- #
 def test_file_level_suppression():
